@@ -1,0 +1,81 @@
+"""Benchmark harness — one module per paper table/figure.
+
+  validation           paper Fig. 6 / Table I   (MARS & SDP targets)
+  runtime_analysis     paper Fig. 7             (framework runtime)
+  sparsity_exploration paper Fig. 8–10 / Tab II (§VII-B use-case)
+  mapping_exploration  paper Fig. 11–12         (§VII-C use-case)
+
+Usage:  PYTHONPATH=src python -m benchmarks.run [--only NAME] [--csv FILE]
+Each row prints as ``name,us_per_call,<derived...>``.
+"""
+from __future__ import annotations
+
+import argparse
+import csv
+import time
+from typing import Dict, List
+
+from . import (mapping_exploration, runtime_analysis, sparsity_exploration,
+               validation)
+
+SUITES = {
+    "validation": validation.run,
+    "runtime": runtime_analysis.run,
+    "sparsity": sparsity_exploration.run,
+    "mapping": mapping_exploration.run,
+}
+
+
+def _fmt(row: Dict) -> str:
+    head = f"{row['name']},{row.get('us_per_call', 0.0):.1f}"
+    rest = ",".join(
+        f"{k}={v}" for k, v in row.items()
+        if k not in ("name", "us_per_call"))
+    return head + ("," + rest if rest else "")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", choices=sorted(SUITES), default=None)
+    ap.add_argument("--csv", default=None, help="also write rows to CSV")
+    args = ap.parse_args(argv)
+
+    all_rows: List[Dict] = []
+    names = [args.only] if args.only else list(SUITES)
+    t_total = time.perf_counter()
+    ok = True
+    for name in names:
+        print(f"== {name} ==", flush=True)
+        t0 = time.perf_counter()
+        try:
+            rows = SUITES[name]()
+        except Exception as e:  # noqa: BLE001 — report and continue
+            print(f"  SUITE FAILED: {type(e).__name__}: {e}", flush=True)
+            ok = False
+            continue
+        for r in rows:
+            r.setdefault("suite", name)
+            print("  " + _fmt(r), flush=True)
+        all_rows.extend(rows)
+        print(f"  ({len(rows)} rows, {time.perf_counter() - t0:.1f}s)",
+              flush=True)
+
+    if args.csv and all_rows:
+        keys: List[str] = []
+        for r in all_rows:
+            for k in r:
+                if k not in keys:
+                    keys.append(k)
+        with open(args.csv, "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=keys)
+            w.writeheader()
+            w.writerows(all_rows)
+        print(f"wrote {len(all_rows)} rows to {args.csv}")
+
+    print(f"total: {len(all_rows)} rows in "
+          f"{time.perf_counter() - t_total:.1f}s")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,88 @@
+"""Paper Fig. 6 / Table I — validation against MARS and SDP.
+
+Reproduces the validation *setups* (architectures, sparsity patterns,
+models, scopes from Table I) and reports estimated speedups / energy
+savings / power-breakdown shares.  Reference points are transcribed from
+the cited works' reported ranges (MARS [19]; SDP [20]) — marked
+APPROXIMATE since the originals' figure data is not published as
+numbers; the paper's own validation claim is a ≤5.27 % error envelope
+against such points.
+
+Operating points follow the original designs' evaluations:
+* MARS prunes 16-weight row groups; its accuracy-constrained operating
+  sparsity lands at ~72 % for the CIFAR models.
+* SDP's hybrid IntraBlock(2,1)+FullBlock(2,8) runs at 70 % overall with
+  a measured input-bit skip ratio of 0.15 (profiled int8 activations).
+* SDP's macro is row-granular (1×64 sub-arrays, shared per-column MAC)
+  → modeled ``row_serial=True``: row pruning saves time, IntraBlock's
+  double-broadcast saves energy but streams both candidates.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+from repro.core import (compare, default_mapping, dense_baseline, hybrid,
+                        mars_arch, resnet18, resnet50, row_block, sdp_arch,
+                        simulate, vgg16)
+
+# Approximate reported relative gains (speedup, energy saving) —
+# transcription notes in EXPERIMENTS.md §Validation.
+REFERENCE = {
+    ("mars", "vgg16"): (2.7, 3.1),
+    ("mars", "resnet18"): (2.4, 2.9),
+    ("sdp", "resnet18"): (2.3, 3.4),
+    ("sdp", "resnet50"): (2.1, 3.2),
+}
+
+
+def run() -> List[Dict]:
+    rows = []
+    cases = [
+        # design, arch, model, workload, spec, profiled input-skip ratio
+        ("mars", mars_arch(), "vgg16", lambda: vgg16(32),
+         row_block(0.72, 16), None),
+        ("mars", mars_arch(), "resnet18", lambda: resnet18(32),
+         row_block(0.72, 16), None),
+        ("sdp", sdp_arch(), "resnet18", lambda: resnet18(224, 1000),
+         hybrid(2, 8, 0.70), 0.15),
+        ("sdp", sdp_arch(), "resnet50", lambda: resnet50(224, 1000),
+         hybrid(2, 8, 0.70), 0.15),
+    ]
+    errs = []
+    for design, arch, model, wl_fn, spec, skip in cases:
+        mapping = default_mapping(arch, "duplicate")
+        wl = wl_fn().set_sparsity(spec)
+        sk = None
+        if arch.input_sparsity_support and skip:
+            sk = {op.name: skip for op in wl.mvm_ops(arch.eval_scope)}
+        t0 = time.perf_counter()
+        rep = simulate(arch, wl, mapping, input_sparsity=sk)
+        dt = time.perf_counter() - t0
+        dense = dense_baseline(arch, wl, mapping)
+        c = compare(rep, dense)
+        ref = REFERENCE[(design, model)]
+        err = max(abs(c["speedup"] - ref[0]) / ref[0],
+                  abs(c["energy_saving"] - ref[1]) / ref[1])
+        errs.append(err)
+        shares = rep.grouped_energy()
+        tot = max(sum(shares.values()), 1e-9)
+        rows.append({
+            "name": f"validation/{design}/{model}",
+            "us_per_call": dt * 1e6,
+            "speedup": round(c["speedup"], 3),
+            "energy_saving": round(c["energy_saving"], 3),
+            "utilization": round(c["utilization"], 3),
+            "ref_speedup": ref[0],
+            "ref_energy": ref[1],
+            "rel_err": round(err, 4),
+            "power_shares": {k: round(v / tot, 3) for k, v in shares.items()},
+        })
+    rows.append({
+        "name": "validation/error_envelope",
+        "us_per_call": 0.0,
+        "max_rel_err": round(max(errs), 4),
+        "mean_rel_err": round(sum(errs) / len(errs), 4),
+        "paper_claim": 0.0527,
+    })
+    return rows

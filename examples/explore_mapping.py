@@ -1,0 +1,59 @@
+"""Mapping-strategy exploration (paper §VII-C) as an interactive script.
+
+Sweeps mapping strategy (spatial weight-unroll vs weight duplication) ×
+macro organisation (8×2 / 4×4 / 2×8) × weight rearrangement for a sparse
+ResNet-50 on a 16-macro CIM architecture, and prints the trade-off table
+that backs the paper's Finding 2.
+
+Run:  PYTHONPATH=src python examples/explore_mapping.py [--model resnet50|vgg16]
+"""
+import argparse
+
+from repro.core import (default_mapping, dense_baseline, hybrid, compare,
+                        resnet50, simulate, sweep_mappings, usecase_arch,
+                        vgg16)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--model", choices=["resnet50", "vgg16"],
+                    default="resnet50")
+    args = ap.parse_args()
+    wl_fn = {"resnet50": lambda: resnet50(32),
+             "vgg16": lambda: vgg16(32)}[args.model]
+    spec = hybrid(2, 16, 0.8)
+
+    rows = sweep_mappings(lambda org: usecase_arch(16, org), wl_fn, spec,
+                          orgs=((8, 2), (4, 4), (2, 8)),
+                          strategies=("spatial", "duplicate"))
+    print(f"{args.model} × IntraBlock(2,1)+FullBlock(2,16) @ 80% "
+          f"on 16-macro CIM\n")
+    hdr = f"{'org':>5} {'strategy':>10} {'latency ms':>11} " \
+          f"{'energy uJ':>10} {'util':>6} {'speedup':>8}"
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        print(f"{r['org']:>5} {r['mapping']:>10} {r['latency_ms']:>11.4f} "
+              f"{r['energy_uj']:>10.2f} {r['utilization']:>6.1%} "
+              f"{r['speedup']:>8.2f}")
+
+    best = min(rows, key=lambda r: r["latency_ms"])
+    print(f"\nbest: {best['mapping']} @ {best['org']} "
+          f"({best['latency_ms']:.4f} ms)")
+
+    # rearrangement study at the balanced 4×4 organisation
+    print("\nweight rearrangement (4×4, duplicate):")
+    arch = usecase_arch(16, (4, 4))
+    dense = dense_baseline(arch, wl_fn(), default_mapping(arch, "duplicate"))
+    for rr, label in ((None, "as-compressed"), ("slice", "rearranged")):
+        mapping = default_mapping(arch, "duplicate", rearrange=rr,
+                                  slice_size=arch.macro.sub_rows if rr else 0)
+        rep = simulate(arch, wl_fn().set_sparsity(spec), mapping)
+        c = compare(rep, dense)
+        print(f"  {label:14s} util {rep.utilization:.1%}  "
+              f"energy {rep.total_energy_uj:.2f} uJ  "
+              f"speedup {c['speedup']:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

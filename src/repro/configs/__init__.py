@@ -1,0 +1,48 @@
+"""Architecture config registry: ``get_config(name)`` / ``--arch <id>``."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from .base import ArchConfig, ShapeCell, SHAPE_CELLS
+
+_ARCH_MODULES = {
+    "dbrx-132b": "dbrx_132b",
+    "qwen3-moe-30b-a3b": "qwen3_moe_30b_a3b",
+    "whisper-medium": "whisper_medium",
+    "gemma2-9b": "gemma2_9b",
+    "llama3-8b": "llama3_8b",
+    "qwen3-4b": "qwen3_4b",
+    "gemma-7b": "gemma_7b",
+    "mamba2-130m": "mamba2_130m",
+    "hymba-1.5b": "hymba_1_5b",
+    "paligemma-3b": "paligemma_3b",
+}
+
+
+def list_archs() -> List[str]:
+    return list(_ARCH_MODULES)
+
+
+def get_config(name: str) -> ArchConfig:
+    if name not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {list_archs()}")
+    mod = importlib.import_module(f".{_ARCH_MODULES[name]}", __package__)
+    return mod.CONFIG
+
+
+def all_configs() -> Dict[str, ArchConfig]:
+    return {n: get_config(n) for n in _ARCH_MODULES}
+
+
+def cells_for(cfg: ArchConfig) -> Dict[str, ShapeCell]:
+    """The shape cells that run for this arch (long_500k needs
+    sub-quadratic attention; see DESIGN.md §3.2)."""
+    cells = dict(SHAPE_CELLS)
+    if not cfg.subquadratic:
+        cells.pop("long_500k")
+    return cells
+
+
+__all__ = ["ArchConfig", "ShapeCell", "SHAPE_CELLS", "get_config",
+           "list_archs", "all_configs", "cells_for"]

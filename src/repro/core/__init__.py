@@ -1,0 +1,55 @@
+"""CIMinus core: the paper's contribution as a composable library.
+
+Public API:
+
+* FlexBlock sparsity abstraction (§III): :mod:`repro.core.flexblock`
+* Pruning workflow (§IV-D):            :mod:`repro.core.pruning`
+* Hardware description (§IV-C):        :mod:`repro.core.hardware` / presets
+* Workload DAG (§IV-C):                :mod:`repro.core.workload`
+* Mapping description (§IV-C):         :mod:`repro.core.mapping`
+* Cost model (§V):                     :mod:`repro.core.costmodel`
+* Input-sparsity profiling (§IV-B):    :mod:`repro.core.input_sparsity`
+* Exploration sweeps (§VII):           :mod:`repro.core.explorer`
+"""
+from .flexblock import (FlexBlockSpec, FullBlock, IntraBlock, TABLE_II_PATTERNS,
+                        channel_wise, column_block, column_wise, dense_spec,
+                        hybrid, row_block, row_wise)
+from .hardware import CIMArch, ComputeUnit, MacroSpec, MemoryUnit
+from .mapping import (MappingSpec, ReshapeSpec, default_mapping,
+                      duplicate_mapping, reshape_and_compress, spatial_mapping)
+from .costmodel import compare, dense_baseline, simulate
+from .pruning import (block_losses, flexblock_mask, fullblock_mask,
+                      intrablock_mask, prune_matrix)
+from .report import CostReport, OpCost
+from .workload import (MODEL_BUILDERS, OpNode, Workload, lm_workload,
+                       mobilenet_v2, resnet18, resnet50, vgg16)
+from .presets import mars_arch, sdp_arch, usecase_arch, PRESET_ARCHS
+from .input_sparsity import (analytic_skip_ratio, profile_activations,
+                             quantize_int8, skippable_bit_ratio)
+from .explorer import sweep_mappings, sweep_orgs, sweep_sparsity
+
+__all__ = [
+    # flexblock
+    "FlexBlockSpec", "FullBlock", "IntraBlock", "TABLE_II_PATTERNS",
+    "channel_wise", "column_block", "column_wise", "dense_spec", "hybrid",
+    "row_block", "row_wise",
+    # hardware
+    "CIMArch", "ComputeUnit", "MacroSpec", "MemoryUnit",
+    "mars_arch", "sdp_arch", "usecase_arch", "PRESET_ARCHS",
+    # mapping
+    "MappingSpec", "ReshapeSpec", "default_mapping", "duplicate_mapping",
+    "reshape_and_compress", "spatial_mapping",
+    # cost model
+    "compare", "dense_baseline", "simulate", "CostReport", "OpCost",
+    # pruning
+    "block_losses", "flexblock_mask", "fullblock_mask", "intrablock_mask",
+    "prune_matrix",
+    # workload
+    "MODEL_BUILDERS", "OpNode", "Workload", "lm_workload", "mobilenet_v2",
+    "resnet18", "resnet50", "vgg16",
+    # input sparsity
+    "analytic_skip_ratio", "profile_activations", "quantize_int8",
+    "skippable_bit_ratio",
+    # explorer
+    "sweep_mappings", "sweep_orgs", "sweep_sparsity",
+]

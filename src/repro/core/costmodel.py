@@ -1,0 +1,383 @@
+"""CIMinus cost model (paper §V).
+
+Latency: pipelined load / compute / write-back schedule per Eq. 3 —
+``L_total = L1_load + Σ P_i(L_i^load, L_{i-1}^comp, L_{i-1}^wb) + L_n^comp
++ L_n^wb`` where ``P_i`` resolves to the pipeline bottleneck stage given
+buffer double-buffering capabilities.
+
+Energy: Eq. 4–7 — Σ per-access·access-count over compute units, read /
+write energies over memory units, plus static power × total latency
+(mW × ns ≡ pJ).
+
+Sparsity-support overhead (§V-B): index-memory traffic and capacity
+(Eq. 8), IntraBlock input-select multiplexers, misaligned partial-sum
+accumulators, and pre-processing zero-bit detection for input sparsity.
+
+The simulation walks the workload DAG op by op, tiles each MVM op via
+:func:`repro.core.mapping.reshape_and_compress`, schedules tiles over the
+macro organisation per the mapping strategy, and accumulates unit access
+counts exactly (cycle-accurate at tile granularity, the level the paper
+validates at).
+"""
+from __future__ import annotations
+
+import copy
+import dataclasses
+import math
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from .flexblock import FlexBlockSpec
+from .hardware import CIMArch
+from .mapping import MappingSpec, reshape_and_compress
+from .report import CostReport, OpCost
+from .workload import OpNode, Workload
+
+__all__ = ["simulate", "dense_baseline", "compare"]
+
+
+@dataclasses.dataclass
+class _Step:
+    """One pipeline step: a tile-group loaded, computed, written back."""
+
+    load: float
+    comp: float
+    wb: float
+
+
+def _pipeline(steps: List[_Step], overlap: bool) -> float:
+    """Eq. 3.  With double buffering (ping-pong weight buffer), step i's
+    load overlaps step i-1's compute+write-back:
+    ``P_i = max(L_i^load, L_{i-1}^comp + L_{i-1}^wb)``.  Without, stages
+    serialise: ``P_i = L_i^load + L_{i-1}^comp + L_{i-1}^wb``."""
+    if not steps:
+        return 0.0
+    if not overlap:
+        return float(sum(s.load + s.comp + s.wb for s in steps))
+    lat = steps[0].load
+    for i in range(1, len(steps)):
+        lat += max(steps[i].load, steps[i - 1].comp + steps[i - 1].wb)
+    lat += steps[-1].comp + steps[-1].wb
+    return float(lat)
+
+
+class _Accounting:
+    """Access-count ledger across all units."""
+
+    def __init__(self, arch: CIMArch):
+        self.arch = arch
+        self.compute_acc: Dict[str, float] = {k: 0.0 for k in arch.compute_units}
+        self.mem_rd: Dict[str, float] = {k: 0.0 for k in arch.memory_units}
+        self.mem_wr: Dict[str, float] = {k: 0.0 for k in arch.memory_units}
+
+    def acc(self, unit: str, n: float) -> None:
+        if unit in self.compute_acc and n > 0:
+            self.compute_acc[unit] += n
+
+    def read(self, mem: str, bits: float) -> None:
+        if mem in self.mem_rd and bits > 0:
+            self.mem_rd[mem] += bits / self.arch.mem(mem).width_bits
+
+    def write(self, mem: str, bits: float) -> None:
+        if mem in self.mem_wr and bits > 0:
+            self.mem_wr[mem] += bits / self.arch.mem(mem).width_bits
+
+    def energy_breakdown(self, latency_cycles: float) -> Dict[str, float]:
+        """Eq. 4–7, in pJ."""
+        arch = self.arch
+        out: Dict[str, float] = {}
+        for name, cu in arch.compute_units.items():
+            out[name] = cu.energy_pj * self.compute_acc[name]
+        for name, mu in arch.memory_units.items():
+            out[name] = (mu.read_pj * self.mem_rd[name]
+                         + mu.write_pj * self.mem_wr[name])
+        # Eq. 7: static energy = P_stat × L_total.  mW × ns = pJ.
+        t_ns = latency_cycles * arch.cycle_ns
+        out["static"] = arch.static_power_mw() * t_ns
+        return out
+
+
+def _input_buffer(arch: CIMArch) -> str:
+    for cand in ("input_buf", "global_buf", "weight_buf"):
+        if arch.has_mem(cand):
+            return cand
+    return next(iter(arch.memory_units))
+
+
+def _weight_buffer(arch: CIMArch) -> str:
+    for cand in ("weight_buf", "global_buf"):
+        if arch.has_mem(cand):
+            return cand
+    return next(iter(arch.memory_units))
+
+
+def _output_buffer(arch: CIMArch) -> str:
+    for cand in ("output_buf", "global_buf", "input_buf"):
+        if arch.has_mem(cand):
+            return cand
+    return next(iter(arch.memory_units))
+
+
+def _mvm_op_cost(
+    op: OpNode,
+    arch: CIMArch,
+    mapping: MappingSpec,
+    acct: _Accounting,
+    *,
+    input_skip_ratio: float = 0.0,
+    block_keep: Optional[np.ndarray] = None,
+) -> OpCost:
+    """Cost one MVM op with a *band-packing* schedule.
+
+    Digital CIM accumulates partial sums per sub-array, so the placement
+    granularity is a **band** of ``sub_rows`` array rows.  Each N-tile
+    (``macro.cols`` output columns) with compressed row extent ``k_eff``
+    demands ``ceil(k_eff / sub_rows)`` bands; bands from different tiles
+    pack into the same macro (the adder tree + extra accumulators route
+    their partial sums separately — §V-B's misaligned-aggregation
+    support).  This is where CIM sparsity speedup actually comes from:
+
+    * fewer bands ⇒ fewer waves when weights exceed array capacity;
+    * leftover bands ⇒ weight-duplication headroom, splitting the input
+      vectors across replicas (§VII-C weight duplication);
+    * input sparsity ⇒ shorter effective bit-serial length.
+    """
+    macro = arch.macro
+    grid = reshape_and_compress(op, arch, mapping.reshape,
+                                block_keep=block_keep)
+    n_macros = arch.n_macros
+    org_r, org_c = arch.org
+    bands_per_macro = macro.rows // macro.sub_rows
+
+    # ---- effective bit-serial length (input sparsity, §IV-C ③) ------------
+    V = max(op.V, 1)
+    eff_bits = float(macro.input_bits)
+    if arch.input_sparsity_support and input_skip_ratio > 0.0:
+        eff_bits = macro.input_bits * (1.0 - input_skip_ratio)
+        # OR-tree zero detection scans every input element once per bit
+        acct.acc("zero_detect", float(V) * grid.K)
+    comp_cycles_per_vec = max(1.0, eff_bits * macro.mac_cycles_per_bit)
+
+    # ---- band demand ---------------------------------------------------------
+    # Per N-tile (width = macro.cols), the compressed row profile of its
+    # columns sets its band demand; ragged profiles are charged at the
+    # tile's max column (fragmentation — unless rearrangement equalised).
+    tile_n = grid.tile_n
+    nt = max(1, math.ceil(grid.n_eff / tile_n))
+    k_cols = grid.k_eff if len(grid.k_eff) else np.array([grid.K])
+    tile_bands = []
+    tile_rows = []
+    for j in range(nt):
+        cols = k_cols[j * tile_n:(j + 1) * tile_n]
+        k_max = int(cols.max()) if len(cols) else 0
+        if k_max <= 0:
+            continue
+        tile_bands.append(math.ceil(k_max / macro.sub_rows))
+        tile_rows.append(float(cols.sum()) / max(len(cols), 1))
+    B = max(1, int(sum(tile_bands)))          # total band demand
+    rows_used = float(sum(r for r in tile_rows))  # mean real rows per tile col
+    ragged = any(
+        len(set(int(c) for c in k_cols[j * tile_n:(j + 1) * tile_n])) > 1
+        for j in range(nt))
+
+    # ---- schedule -------------------------------------------------------------
+    # spatial:   all macros hold distinct bands; no duplication.
+    # duplicate: one org row's worth of macros holds the weights; the
+    #            org[0] rows replicate them and split V.  Leftover bands
+    #            within a wave add intra-wave duplication headroom.
+    if mapping.strategy == "spatial":
+        slots = n_macros * bands_per_macro
+        waves = math.ceil(B / slots)
+        dup = 1
+    else:
+        row_slots = org_c * bands_per_macro
+        waves = math.ceil(B / row_slots)
+        dup = org_r
+        if waves == 1:
+            dup = min(V, org_r * max(1, row_slots // B))
+    v_eff = math.ceil(V / dup)
+
+    # ---- per-wave latency (Eq. 3 inner pipeline) --------------------------------
+    bands_this_wave = min(B, bands_per_macro)  # per macro, upper bound
+    load_cycles = math.ceil(bands_this_wave * macro.sub_rows
+                            / macro.load_rows_per_cycle)
+    serial_rows = 1.0
+    if macro.row_serial:
+        # row-serial macros: each resident band is processed in sequence
+        # by the shared per-column MAC → compute scales with resident
+        # band count (this is where SDP's row-pruning speedup comes from).
+        # IntraBlock column compression keeps the row count low but each
+        # compressed row streams its ``intra_fanin`` broadcast candidates
+        # bit-serially — the mux picks per-cell — so intra compression
+        # saves ENERGY (fewer array rows) but not broadcast TIME.
+        holders = n_macros if mapping.strategy == "spatial" else org_c
+        serial_rows = float(min(bands_per_macro,
+                                max(1, math.ceil(B / (waves * holders)))))
+        serial_rows *= grid.intra_fanin
+    comp_cycles = v_eff * comp_cycles_per_vec * serial_rows
+    # partial sums accumulate on-chip (adder tree / accumulators); the
+    # output buffer receives post-processed activation-quantized values
+    out_bits_per_vec = tile_n * macro.input_bits
+    wb_bus = arch.mem(_output_buffer(arch)).width_bits
+    wb_cycles = math.ceil(v_eff * out_bits_per_vec / wb_bus)
+    overlap = arch.mem(_weight_buffer(arch)).ping_pong
+    steps = [_Step(load_cycles, comp_cycles, wb_cycles) for _ in range(waves)]
+    lat = _pipeline(steps, overlap)
+
+    # ---- compute-unit access counting --------------------------------------------
+    # cim_array fires per (band × vector × bit); all V vectors pass through
+    # some replica, so totals are duplication-invariant (dup trades time
+    # for parallel energy) — but fragmentation (ceil to bands) costs real
+    # energy, matching Fig. 9's alignment findings.
+    subs_per_band = macro.cols // macro.sub_cols
+    band_vec_cycles = float(B) * subs_per_band * V * comp_cycles_per_vec
+    acct.acc("cim_array", band_vec_cycles)
+    acct.acc("adder_tree", float(B) * V * comp_cycles_per_vec)
+    acct.acc("shift_add", float(len(tile_bands) or 1) * V)
+    # cross-wave / cross-macro partial-sum accumulation
+    k_span = max(1, math.ceil((int(k_cols.max()) if len(k_cols) else grid.K)
+                              / macro.rows))
+    if k_span > 1 or waves > 1:
+        acct.acc("accumulator", float(max(k_span - 1, waves - 1)) * V
+                 * max(grid.n_eff, 1) / max(nt, 1))
+
+    # pre-processing: each input element bit-serial converted once per wave
+    acct.acc("pre_proc", float(V) * grid.K)
+
+    # ---- memory traffic -------------------------------------------------------------
+    ibuf, wbuf, obuf = _input_buffer(arch), _weight_buffer(arch), _output_buffer(arch)
+    w_bits = float(np.sum(grid.k_eff)) * macro.weight_bits
+    acct.write(wbuf, w_bits)                      # filled once (off-chip DMA)
+    acct.read(wbuf, w_bits * dup)                 # array loads, × replicas
+    # inputs: FullBlock row compression cuts traffic; IntraBlock does not
+    # (each compressed row receives its intra_fanin broadcast candidates).
+    mean_k = float(np.mean(k_cols)) if len(k_cols) else float(grid.K)
+    in_bits = float(V) * mean_k * grid.intra_fanin * macro.input_bits
+    acct.read(ibuf, in_bits)
+    o_bits = float(V) * max(grid.n_eff, 1) * float(macro.input_bits)
+    acct.write(obuf, o_bits)
+    if k_span > 1:  # partial-sum spill/refill across K spans (32b wide)
+        spill = float(V) * max(grid.n_eff, 1) * 32.0 * (k_span - 1)
+        acct.read(obuf, spill)
+        acct.write(obuf, spill)
+
+    # ---- sparsity support (§V-B) ------------------------------------------------------
+    spec: FlexBlockSpec = op.sparsity.bind((op.K, op.N))
+    idx_bits = 0
+    if not spec.is_dense and arch.weight_sparsity_support:
+        idx_bits = spec.index_storage_bits((op.K, op.N))          # Eq. 8
+        acct.write("index_mem", float(idx_bits))                  # stored once
+        acct.read("index_mem", float(idx_bits))                   # streamed once/op
+        if grid.intra_fanin > 1 and len(k_cols):
+            # mux select: every compressed row picks 1-of-fanin per vector
+            acct.acc("mux_index", mean_k * V)
+        if grid.misaligned or ragged:
+            acct.acc("sparse_accum", float(V) * max(grid.n_eff, 1))
+
+    # utilisation: real weight rows (× replicas) over provisioned capacity
+    provisioned = waves * (n_macros * bands_per_macro) * macro.sub_rows
+    util = min(1.0, rows_used * dup / max(provisioned, 1))
+    return OpCost(name=op.name, kind=op.kind, latency_cycles=lat,
+                  macs=op.macs, tiles=len(tile_bands) or 1, waves=waves,
+                  utilization=util, index_bits=idx_bits,
+                  occupancy=grid.mean_occupancy)
+
+
+def _other_op_cost(op: OpNode, arch: CIMArch, acct: _Accounting) -> OpCost:
+    """Non-MVM ops (pool / act / add / norm / embed) run on post_proc."""
+    post = arch.unit("post_proc")
+    n = max(op.elements, 1)
+    cycles = math.ceil(n / max(post.width, 1))
+    acct.acc("post_proc", float(n))
+    acct.read(_input_buffer(arch), float(n) * 8)
+    acct.write(_output_buffer(arch), float(n) * 8)
+    if op.kind == "embed":
+        acct.read(_weight_buffer(arch), float(n) * 8)
+    return OpCost(name=op.name, kind=op.kind, latency_cycles=float(cycles),
+                  macs=0, tiles=0, waves=0, utilization=0.0, index_bits=0,
+                  occupancy=0.0)
+
+
+def simulate(
+    arch: CIMArch,
+    workload: Workload,
+    mapping: MappingSpec,
+    *,
+    input_sparsity: Optional[Dict[str, float]] = None,
+    masks: Optional[Dict[str, np.ndarray]] = None,
+) -> CostReport:
+    """Run the CIMinus cost simulation.
+
+    ``input_sparsity`` maps op name → skippable-bit ratio (from
+    :mod:`repro.core.input_sparsity` profiling).
+    ``masks`` maps op name → FullBlock block keep-grid from the pruning
+    workflow; otherwise seeded random grids with exact Φ are synthesised
+    (the paper's auto-generated mask path).
+    """
+    arch.validate()
+    acct = _Accounting(arch)
+    op_costs: List[OpCost] = []
+    scoped = {o.name for o in workload.mvm_ops(arch.eval_scope)}
+
+    for op in workload.nodes.values():
+        if (op.is_mvm or op.kind == "dwconv") and op.name in scoped:
+            oc = _mvm_op_cost(op, arch, mapping, acct,
+                              input_skip_ratio=(input_sparsity or {}).get(op.name, 0.0),
+                              block_keep=(masks or {}).get(op.name))
+        elif arch.eval_scope == "conv_only":
+            # Table I: MARS evaluates conv layers only — everything else
+            # is outside the measured scope entirely.
+            continue
+        else:
+            oc = _other_op_cost(op, arch, acct)
+        op_costs.append(oc)
+
+    # Ops are data-dependent along the DAG, so they serialise at op
+    # granularity; intra-op load/compute/wb overlap is already inside the
+    # per-op Eq. 3 pipeline.
+    total_cycles = float(sum(c.latency_cycles for c in op_costs))
+
+    energy = acct.energy_breakdown(total_cycles)
+    mvm_costs = [c for c in op_costs if c.tiles > 0]
+    util = (sum(c.utilization * c.macs for c in mvm_costs)
+            / max(sum(c.macs for c in mvm_costs), 1)) if mvm_costs else 0.0
+    idx_bits = sum(c.index_bits for c in op_costs)
+    cap = arch.index_capacity_bits()
+    return CostReport(
+        arch=arch.name,
+        workload=workload.name,
+        mapping=mapping.strategy,
+        latency_cycles=total_cycles,
+        latency_ms=total_cycles * arch.cycle_ns * 1e-6,
+        energy_pj=energy,
+        total_energy_uj=sum(energy.values()) * 1e-6,
+        utilization=util,
+        op_costs=op_costs,
+        index_storage_bits=idx_bits,
+        index_capacity_ok=(cap == 0 or idx_bits <= cap * 64),
+    )
+
+
+def dense_baseline(arch: CIMArch, workload: Workload,
+                   mapping: MappingSpec) -> CostReport:
+    """The paper's dense baseline: same architecture configuration, no
+    sparsity-support hardware engaged, dense weights."""
+    dense_wl = Workload(workload.name + "-dense")
+    for n in workload.nodes.values():
+        dn = copy.copy(n)
+        dn.sparsity = FlexBlockSpec()
+        dense_wl.nodes[dn.name] = dn
+    dense_arch = arch.replace(weight_sparsity_support=False,
+                              input_sparsity_support=False)
+    return simulate(dense_arch, dense_wl, mapping)
+
+
+def compare(sparse: CostReport, dense: CostReport) -> Dict[str, float]:
+    """Speedup & energy saving vs. the dense baseline (paper Fig. 6/8)."""
+    return {
+        "speedup": dense.latency_cycles / max(sparse.latency_cycles, 1e-9),
+        "energy_saving": sum(dense.energy_pj.values())
+        / max(sum(sparse.energy_pj.values()), 1e-9),
+        "utilization": sparse.utilization,
+    }

@@ -1,0 +1,117 @@
+"""Input (activation) sparsity profiling (paper §IV-B pre-simulation).
+
+Digital CIM processes inputs bit-serially; a bit position can be skipped
+only when it is zero across *all* inputs broadcast to the activated rows
+of an array (§III-B).  CIMinus therefore profiles sample activations
+before simulation:
+
+1. quantise activations to symmetric int8 (the paper's 8-bit precision);
+2. decompose into bit planes;
+3. for each group of ``group_rows`` inputs (one CIM array's row
+   broadcast), a bit position is skippable iff the OR across the group's
+   bit plane is zero;
+4. the skippable ratio feeds the cost model's effective bit-serial
+   length.
+
+The bit-plane reduction is the :mod:`repro.kernels.bitserial` Pallas
+kernel's job on TPU; a jnp oracle backs it on CPU.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "quantize_int8",
+    "skippable_bit_ratio",
+    "profile_activations",
+    "analytic_skip_ratio",
+]
+
+
+def quantize_int8(x: jnp.ndarray, *, per_tensor_scale: Optional[float] = None
+                  ) -> jnp.ndarray:
+    """Symmetric int8 quantisation (round-to-nearest, saturating)."""
+    x = jnp.asarray(x)
+    scale = per_tensor_scale
+    if scale is None:
+        scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -128, 127).astype(jnp.int8)
+    return q
+
+
+def skippable_bit_ratio(q: jnp.ndarray, group_rows: int, n_bits: int = 8
+                        ) -> float:
+    """Fraction of (group × bit) slots whose bit plane is all-zero.
+
+    ``q`` is an int8 activation tensor reshaped to (n_vectors, K): each
+    row is one input vector; contraction elements split into groups of
+    ``group_rows`` (the array's broadcast span).  Sign-magnitude bit
+    planes are used, matching bit-serial digital CIM datapaths.
+    """
+    q = jnp.asarray(q)
+    if q.ndim == 1:
+        q = q[None, :]
+    mag = jnp.abs(q.astype(jnp.int32))
+    V, K = mag.shape
+    pad = (-K) % group_rows
+    if pad:
+        mag = jnp.pad(mag, ((0, 0), (0, pad)))
+    G = mag.shape[1] // group_rows
+    grouped = mag.reshape(V, G, group_rows)
+    planes_skippable = 0
+    for b in range(n_bits):
+        plane = (grouped >> b) & 1
+        group_or = plane.max(axis=-1)          # OR across the broadcast group
+        planes_skippable += int(jnp.sum(group_or == 0))
+    total = V * G * n_bits
+    return float(planes_skippable) / max(total, 1)
+
+
+def profile_activations(
+    acts: Dict[str, np.ndarray],
+    group_rows: int,
+    n_bits: int = 8,
+) -> Dict[str, float]:
+    """Per-layer skippable-bit ratios from captured activation samples."""
+    out = {}
+    for name, a in acts.items():
+        q = quantize_int8(jnp.asarray(a).reshape(-1, a.shape[-1]))
+        out[name] = skippable_bit_ratio(q, group_rows, n_bits)
+    return out
+
+
+def analytic_skip_ratio(zero_rate: float, group_rows: int,
+                        n_bits: int = 8, mean_mag_bits: float = 4.0) -> float:
+    """Closed-form estimate when no activation samples are available.
+
+    Models each activation as zero w.p. ``zero_rate`` (post-ReLU) and,
+    when non-zero, each magnitude bit above ``mean_mag_bits`` decaying
+    geometrically.  A (group, bit) slot skips iff every element's bit is
+    zero.  Used for the CNN modeling plane where pretrained weights are
+    unavailable offline; empirical profiling supersedes it when samples
+    exist.
+    """
+    ratio = 0.0
+    for b in range(n_bits):
+        # P(bit b set | non-zero) — geometric decay above the mean MSB
+        p_set = min(0.5, 0.5 * 2.0 ** (-(max(b - mean_mag_bits, 0.0))))
+        p_elem_zero = zero_rate + (1.0 - zero_rate) * (1.0 - p_set)
+        ratio += p_elem_zero ** group_rows
+    return ratio / n_bits
+
+
+def capture_mlp_activations(
+    apply_fn: Callable,
+    params,
+    sample_inputs,
+    layer_names: List[str],
+) -> Dict[str, np.ndarray]:
+    """Helper: run a model that returns (out, intermediates-dict) and
+    collect the named intermediate activations for profiling."""
+    _, inter = apply_fn(params, sample_inputs)
+    return {k: np.asarray(v) for k, v in inter.items() if k in layer_names}

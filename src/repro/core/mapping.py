@@ -1,0 +1,256 @@
+"""Mapping description interface (paper §IV-C, Fig. 5(c)).
+
+Two halves:
+
+① *Data reshaping* — flattening the (multi-dim) weight into a 2-D matrix
+  (flattening sequence), compressing it along the row or column
+  orientation according to its FlexBlock mask, padding/aligning to the
+  tile size, and optionally *rearranging* ragged compressed shapes
+  (equalisation by padding or slicing with a user slice size).
+
+② *Operation mapping* — a loopnest over the tiled matrix dims where each
+  loop is temporal (sequential) or spatial (assigned to a macro-
+  organisation dimension).  Spatially mapped weight loops *unroll* the
+  matrix across macros; feature loops *duplicate* weights so macros chew
+  different input vectors in parallel (§VII-C's two strategies).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from .flexblock import FlexBlockSpec
+from .hardware import CIMArch
+from .workload import OpNode
+
+__all__ = [
+    "ReshapeSpec", "Loop", "MappingSpec", "TileGrid", "reshape_and_compress",
+    "spatial_mapping", "duplicate_mapping", "default_mapping",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ReshapeSpec:
+    """Data reshaping description (§IV-C ①)."""
+
+    flatten_order: str = "channel_major"   # 'channel_major' | 'kernel_major'
+    compress_orient: str = "auto"          # 'auto' | 'row' | 'col'
+    tile: Optional[Tuple[int, int]] = None  # defaults to macro (rows, cols)
+    rearrange: Optional[str] = None        # None | 'pad' | 'slice'
+    slice_size: int = 0                    # for rearrange='slice'
+    slice_axis: str = "row"
+
+
+@dataclasses.dataclass(frozen=True)
+class Loop:
+    """One loopnest level."""
+
+    dim: str           # 'k_tile' | 'n_tile' | 'v_tile'
+    extent: int
+    kind: str          # 'temporal' | 'spatial'
+    org_axis: int = -1  # for spatial loops: macro-organisation axis (0|1)
+
+
+@dataclasses.dataclass(frozen=True)
+class MappingSpec:
+    """Full mapping description for MVM ops."""
+
+    reshape: ReshapeSpec
+    strategy: str = "spatial"   # 'spatial' (unroll weights) | 'duplicate'
+    # which org axes serve weight-K, weight-N, and feature duplication
+    k_axis: int = 0
+    n_axis: int = 1
+    mapping_dict: Tuple[Tuple[str, str], ...] = (
+        ("conv", "cim_macro"), ("fc", "cim_macro"), ("matmul", "cim_macro"),
+        ("dwconv", "cim_macro"),
+        ("pool", "post_proc"), ("act", "post_proc"), ("add", "post_proc"),
+        ("norm", "post_proc"), ("embed", "post_proc"),
+    )
+
+    def target_of(self, kind: str) -> str:
+        for k, v in self.mapping_dict:
+            if k == kind:
+                return v
+        return "post_proc"
+
+
+@dataclasses.dataclass
+class TileGrid:
+    """Result of reshape+compress+tile for one MVM op.
+
+    ``occupancy[kt, nt]`` = fraction of the (tile_k × tile_n) tile that
+    holds real (non-padding) weight rows×cols; drives utilisation and
+    energy.  ``row_lengths[nt]`` = compressed K extent per column tile
+    (ragged when FullBlock pruning removes different row counts per
+    column group).
+    """
+
+    K: int                      # original contraction extent
+    N: int                      # original output extent
+    k_eff: np.ndarray           # per-column-tile compressed row count
+    n_eff: int                  # compressed output extent
+    tile_k: int
+    tile_n: int
+    occupancy: np.ndarray       # (kt, nt) in [0,1]
+    intra_fanin: int = 1        # inputs broadcast per array row (IntraBlock m)
+    misaligned: bool = False    # FullBlock boundaries cross sub-array rows
+
+    @property
+    def grid(self) -> Tuple[int, int]:
+        return self.occupancy.shape
+
+    @property
+    def n_tiles(self) -> int:
+        return int(np.prod(self.occupancy.shape))
+
+    @property
+    def mean_occupancy(self) -> float:
+        if self.occupancy.size == 0:
+            return 0.0
+        return float(self.occupancy.mean())
+
+
+def _block_keep_grid(op: OpNode, spec: FlexBlockSpec) -> Optional[np.ndarray]:
+    """Deterministic pseudo-random block keep-grid for costing.
+
+    The cost model needs *which* blocks survive to measure raggedness.
+    When real masks are supplied (from the pruning workflow) the caller
+    passes them in; otherwise we synthesise a seeded random grid with the
+    exact block keep-count Φ — the paper's auto-generated randomised
+    sparsity mask path (§IV-C).
+    """
+    full = spec.full
+    if full is None:
+        return None
+    shape = (op.K, op.N)
+    f = full.bind(shape)
+    gm, gn = f.grid(shape)
+    n_keep = f.nonzero_blocks(shape)
+    rng = np.random.default_rng(abs(hash((op.name, f.m, f.n, round(f.ratio, 6)))) % (2**32))
+    keep = np.zeros(gm * gn, dtype=bool)
+    keep[rng.permutation(gm * gn)[:n_keep]] = True
+    return keep.reshape(gm, gn)
+
+
+def reshape_and_compress(
+    op: OpNode,
+    arch: CIMArch,
+    reshape: ReshapeSpec,
+    *,
+    block_keep: Optional[np.ndarray] = None,
+) -> TileGrid:
+    """① Data reshaping: compress the op's K×N weight view per its
+    FlexBlock spec, align to the tile size, optionally rearrange."""
+    spec = op.sparsity.bind((op.K, op.N))
+    tile_k, tile_n = reshape.tile or (arch.macro.rows, arch.macro.cols)
+    intra = spec.intra
+    full = spec.full
+
+    # Resolve 'auto' compression orientation from the pattern structure:
+    # IntraBlock always compresses column-wise along K ('row' profile);
+    # FullBlock patterns spanning every matrix row (column/filter-wise
+    # pruning) compress out whole output columns instead.
+    orient = reshape.compress_orient
+    if orient == "auto":
+        if intra is not None or full is None:
+            orient = "row"
+        else:
+            fb = full.bind((op.K, op.N))
+            orient = "col" if fb.m >= op.K else "row"
+    reshape = dataclasses.replace(reshape, compress_orient=orient)
+
+    # --- IntraBlock: uniform column-wise compression of the K dim ---------
+    intra_fanin = 1
+    k_base = op.K
+    if intra is not None:
+        intra_fanin = intra.m
+        k_base = math.ceil(op.K * intra.phi / intra.m)
+
+    # --- FullBlock: block-grid compression (possibly ragged) --------------
+    n_eff = op.N
+    misaligned = False
+    if full is not None:
+        f = full.bind((op.K, op.N))
+        keep = block_keep if block_keep is not None else _block_keep_grid(op, spec)
+        gm, gn = keep.shape
+        # row-extent removed per block-column group
+        if reshape.compress_orient == "row":
+            # compress along K: per block-column, count surviving block rows
+            rows_per_block = f.m if intra is None else max(1, round(f.m * intra.phi / intra.m))
+            k_per_bcol = keep.sum(axis=0) * rows_per_block          # (gn,)
+            # expand block columns to element columns
+            n_groups = gn
+            col_width = f.n if f.n > 0 else op.N
+            # ragged: element-columns in group j have k_per_bcol[j] rows
+            k_cols = np.repeat(k_per_bcol, col_width)[: op.N]
+            misaligned = (f.m % arch.macro.sub_rows != 0) and (f.m != 1) \
+                and (intra is None)
+        else:
+            # compress along N: per block-row, surviving block columns
+            n_keep_cols = int(keep.sum(axis=1).max()) if keep.size else 0
+            n_eff = n_keep_cols * f.n
+            k_cols = np.full(max(n_eff, 1), k_base)
+            misaligned = (f.n % arch.macro.sub_cols != 0) and (f.n != 1)
+    else:
+        k_cols = np.full(op.N, k_base)
+
+    # --- rearrangement: equalise ragged compressed shapes ------------------
+    if reshape.rearrange == "pad" and k_cols.size:
+        k_cols = np.full_like(k_cols, int(k_cols.max()))
+    elif reshape.rearrange == "slice" and reshape.slice_size > 0 and k_cols.size:
+        # slice long columns into chunks of slice_size and restack: the
+        # effective profile flattens toward the mean, at the cost of extra
+        # tiles when max length exceeds the slice size.
+        total = int(k_cols.sum())
+        width = len(k_cols)
+        mean_len = total / width
+        lvl = max(reshape.slice_size, int(math.ceil(mean_len)))
+        k_cols = np.full(width, lvl)
+
+    # --- tiling -------------------------------------------------------------
+    n_eff = len(k_cols)
+    kt = max(1, math.ceil((int(k_cols.max()) if k_cols.size else k_base) / tile_k))
+    nt = max(1, math.ceil(n_eff / tile_n))
+    occ = np.zeros((kt, nt))
+    for j in range(nt):
+        cols = k_cols[j * tile_n:(j + 1) * tile_n]
+        width_frac = len(cols) / tile_n
+        for i in range(kt):
+            lo, hi = i * tile_k, (i + 1) * tile_k
+            rows = np.clip(cols - lo, 0, tile_k)
+            if len(cols):
+                occ[i, j] = float(rows.mean()) / tile_k * width_frac
+    return TileGrid(K=op.K, N=op.N, k_eff=k_cols, n_eff=n_eff,
+                    tile_k=tile_k, tile_n=tile_n, occupancy=occ,
+                    intra_fanin=intra_fanin, misaligned=misaligned)
+
+
+def spatial_mapping(arch: CIMArch, *, rearrange: Optional[str] = None,
+                    slice_size: int = 0) -> MappingSpec:
+    """Unroll weight tiles across the macro organisation (SP in §VII-C)."""
+    return MappingSpec(
+        reshape=ReshapeSpec(rearrange=rearrange, slice_size=slice_size),
+        strategy="spatial",
+    )
+
+
+def duplicate_mapping(arch: CIMArch, *, rearrange: Optional[str] = None,
+                      slice_size: int = 0) -> MappingSpec:
+    """Duplicate weights across one org axis; macros split input vectors
+    (DP in §VII-C)."""
+    return MappingSpec(
+        reshape=ReshapeSpec(rearrange=rearrange, slice_size=slice_size),
+        strategy="duplicate",
+    )
+
+
+def default_mapping(arch: CIMArch, strategy: str = "spatial",
+                    **kw) -> MappingSpec:
+    if strategy == "spatial":
+        return spatial_mapping(arch, **kw)
+    if strategy == "duplicate":
+        return duplicate_mapping(arch, **kw)
+    raise ValueError(f"unknown mapping strategy {strategy!r}")

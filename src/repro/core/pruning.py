@@ -1,0 +1,198 @@
+"""CIMinus pruning workflow (paper §IV-D).
+
+Generates FlexBlock-conformant binary masks for 2-D weight matrices:
+
+* FullBlock: block loss ``L_FB(W,i,j) = Σ ρ(W[x,y])`` over the block
+  (Eq. 1); the ``r·n_blocks`` blocks with the lowest loss are pruned.
+* IntraBlock: per block, the pattern ``P ∈ 𝒫`` minimising the pruned
+  loss ``L_IB`` (Eq. 2) is selected — equivalently, the pattern that
+  *keeps* the most importance.
+
+Criteria ρ: ``l1`` (|w|) and ``l2`` (w²) as in the paper.
+
+All mask generation is pure-functional on numpy/jax arrays; the heavy
+block-loss reduction can be routed through the Pallas
+``block_importance`` kernel (see :mod:`repro.kernels.ops`).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .flexblock import FlexBlockSpec, FullBlock, IntraBlock
+
+__all__ = [
+    "CRITERIA",
+    "block_losses",
+    "fullblock_mask",
+    "intrablock_mask",
+    "flexblock_mask",
+    "prune_matrix",
+    "PruningResult",
+]
+
+CRITERIA: Dict[str, Callable] = {
+    "l1": lambda w: jnp.abs(w),
+    "l2": lambda w: jnp.square(w),
+}
+
+
+def _pad_to_blocks(w: jnp.ndarray, m: int, n: int) -> jnp.ndarray:
+    M, N = w.shape
+    pm = (-M) % m
+    pn = (-N) % n
+    if pm or pn:
+        w = jnp.pad(w, ((0, pm), (0, pn)))
+    return w
+
+
+def block_losses(w: jnp.ndarray, m: int, n: int, criterion: str = "l1") -> jnp.ndarray:
+    """Eq. 1: per-block aggregated importance, shape (M/m, N/n).
+
+    The matrix is zero-padded up to a whole number of blocks; padding
+    contributes zero loss so it never protects a block from pruning.
+    """
+    rho = CRITERIA[criterion]
+    wp = _pad_to_blocks(jnp.asarray(w), m, n)
+    Mp, Np = wp.shape
+    blocks = rho(wp).reshape(Mp // m, m, Np // n, n)
+    return blocks.sum(axis=(1, 3))
+
+
+def fullblock_mask(
+    w: jnp.ndarray,
+    pattern: FullBlock,
+    criterion: str = "l1",
+    *,
+    eligible: Optional[jnp.ndarray] = None,
+) -> np.ndarray:
+    """Binary keep-mask (1 = keep) for FullBlock sparsity.
+
+    ``eligible`` is an optional block-grid bool array; ineligible blocks
+    (already fully zero from a prior pattern) are treated as pruned for
+    free and do not consume the pruning budget.
+    """
+    p = pattern.bind(w.shape)
+    losses = np.asarray(block_losses(w, p.m, p.n, criterion))
+    gm, gn = losses.shape
+    n_blocks = gm * gn
+    n_keep = p.nonzero_blocks(w.shape)
+    flat = losses.reshape(-1)
+    if eligible is not None:
+        flat = np.where(np.asarray(eligible).reshape(-1), flat, -np.inf)
+    # keep the n_keep highest-loss blocks (stable: ties broken by index)
+    order = np.argsort(-flat, kind="stable")
+    keep_idx = order[:n_keep]
+    keep = np.zeros(n_blocks, dtype=bool)
+    keep[keep_idx] = True
+    keep = keep.reshape(gm, gn)
+    mask = np.repeat(np.repeat(keep, p.m, axis=0), p.n, axis=1)
+    return mask[: w.shape[0], : w.shape[1]].astype(np.uint8)
+
+
+def intrablock_mask(
+    w: jnp.ndarray,
+    pattern: IntraBlock,
+    criterion: str = "l1",
+    *,
+    align_cols: bool = False,
+) -> np.ndarray:
+    """Binary keep-mask for IntraBlock sparsity via Eq. 2 pattern selection.
+
+    For the default (exhaustive) pattern set this reduces to top-φ
+    magnitude selection per block; for a restricted pattern set each
+    block picks ``argmax_P Σ_{P=1} ρ(w)`` — identical to
+    ``argmin_P L_IB`` since block total importance is constant.
+
+    ``align_cols=True`` selects one pattern per block *row-group shared
+    by every column* (importance aggregated across columns).  Aligned
+    masks compress to a pure row-subset, which is the layout the TPU
+    block-sparse kernels require (see kernels/ops.py); CIM hardware
+    with per-element muxes does not need the restriction.
+    """
+    m, n = pattern.m, pattern.n
+    rho = CRITERIA[criterion]
+    wp = _pad_to_blocks(jnp.asarray(w), m, n)
+    Mp, Np = wp.shape
+    imp = np.asarray(rho(wp)).reshape(Mp // m, m, Np // n, n)
+    # (gm, gn, m*n) per-block element importances
+    imp = imp.transpose(0, 2, 1, 3).reshape(Mp // m, Np // n, m * n)
+    if align_cols:
+        # aggregate across the column grid → one shared pattern per row-block
+        imp = np.broadcast_to(imp.sum(axis=1, keepdims=True), imp.shape)
+    if pattern.pattern_set is None:
+        phi = pattern.phi
+        # top-φ per block == optimal over the full pattern set
+        thresh_idx = np.argsort(-imp, axis=-1, kind="stable")[..., :phi]
+        keep = np.zeros_like(imp, dtype=bool)
+        np.put_along_axis(keep, thresh_idx, True, axis=-1)
+    else:
+        pats = np.asarray(pattern.patterns(), dtype=np.float64)  # (P, m*n)
+        kept_importance = imp @ pats.T  # (gm, gn, P)
+        best = np.argmax(kept_importance, axis=-1)
+        keep = pats[best].astype(bool)  # (gm, gn, m*n)
+    gm, gn = keep.shape[:2]
+    mask = keep.reshape(gm, gn, m, n).transpose(0, 2, 1, 3).reshape(gm * m, gn * n)
+    return mask[: w.shape[0], : w.shape[1]].astype(np.uint8)
+
+
+class PruningResult:
+    """Mask + bookkeeping produced by :func:`prune_matrix`."""
+
+    __slots__ = ("mask", "spec", "block_keep", "density")
+
+    def __init__(self, mask: np.ndarray, spec: FlexBlockSpec,
+                 block_keep: Optional[np.ndarray], density: float):
+        self.mask = mask          # (M, N) uint8 keep-mask
+        self.spec = spec
+        self.block_keep = block_keep  # coarse block-grid keep map (or None)
+        self.density = density
+
+    def apply(self, w):
+        return w * jnp.asarray(self.mask, dtype=w.dtype)
+
+
+def flexblock_mask(
+    w: jnp.ndarray, spec: FlexBlockSpec, criterion: str = "l1",
+    *, align_cols: bool = False,
+) -> np.ndarray:
+    """Compose the spec's patterns into a single keep-mask.
+
+    Order of application: coarse FullBlock first (removing whole blocks),
+    then IntraBlock within the surviving region — matching the §IV-D
+    workflow where block-level pruning precedes element-level pruning.
+    """
+    spec = spec.bind(w.shape)
+    spec.validate_for(w.shape)
+    if spec.is_dense:
+        return np.ones(w.shape, dtype=np.uint8)
+    full, intra = spec.full, spec.intra
+    mask = np.ones(w.shape, dtype=np.uint8)
+    if full is not None:
+        mask &= fullblock_mask(w, full, criterion)
+    if intra is not None:
+        w_eff = np.asarray(w) * mask
+        mask &= intrablock_mask(jnp.asarray(w_eff), intra, criterion,
+                                align_cols=align_cols)
+    return mask
+
+
+def prune_matrix(
+    w: jnp.ndarray, spec: FlexBlockSpec, criterion: str = "l1",
+    *, align_cols: bool = False,
+) -> PruningResult:
+    mask = flexblock_mask(w, spec, criterion, align_cols=align_cols)
+    spec_b = spec.bind(w.shape)
+    block_keep = None
+    if spec_b.full is not None:
+        f = spec_b.full
+        gm, gn = f.grid(w.shape)
+        mp = _pad_to_blocks(jnp.asarray(mask), f.m, f.n)
+        bk = np.asarray(mp).reshape(gm, f.m, gn, f.n).sum(axis=(1, 3)) > 0
+        block_keep = bk
+    density = float(mask.mean())
+    return PruningResult(mask, spec_b, block_keep, density)

@@ -1,0 +1,78 @@
+"""Cost report dataclasses produced by the CIMinus simulator."""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, List
+
+__all__ = ["OpCost", "CostReport"]
+
+
+@dataclasses.dataclass
+class OpCost:
+    name: str
+    kind: str
+    latency_cycles: float
+    macs: int
+    tiles: int
+    waves: int
+    utilization: float
+    index_bits: int
+    occupancy: float
+
+
+@dataclasses.dataclass
+class CostReport:
+    """System-level CIMinus output: overall latency + energy breakdown."""
+
+    arch: str
+    workload: str
+    mapping: str
+    latency_cycles: float
+    latency_ms: float
+    energy_pj: Dict[str, float]
+    total_energy_uj: float
+    utilization: float
+    op_costs: List[OpCost]
+    index_storage_bits: int
+    index_capacity_ok: bool
+
+    # -- views ---------------------------------------------------------------
+    def energy_shares(self) -> Dict[str, float]:
+        tot = max(sum(self.energy_pj.values()), 1e-12)
+        return {k: v / tot for k, v in self.energy_pj.items() if v > 0}
+
+    def grouped_energy(self) -> Dict[str, float]:
+        """Power-breakdown groups used in the paper's Fig. 6(c)."""
+        groups = {"cim_macro": 0.0, "buffers": 0.0, "pre_post": 0.0,
+                  "sparsity": 0.0, "static": 0.0}
+        for k, v in self.energy_pj.items():
+            if k in ("cim_array", "adder_tree", "shift_add", "accumulator",
+                     "local_buf"):
+                groups["cim_macro"] += v
+            elif k.endswith("_buf") or k == "global_buf":
+                groups["buffers"] += v
+            elif k in ("pre_proc", "post_proc"):
+                groups["pre_post"] += v
+            elif k in ("mux_index", "sparse_accum", "zero_detect", "index_mem"):
+                groups["sparsity"] += v
+            elif k == "static":
+                groups["static"] += v
+        return groups
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        return d
+
+    def to_json(self, **kw) -> str:
+        return json.dumps(self.to_dict(), **kw)
+
+    def summary(self) -> str:
+        g = self.grouped_energy()
+        return (f"{self.workload} on {self.arch} [{self.mapping}]: "
+                f"{self.latency_ms:.3f} ms, {self.total_energy_uj:.2f} uJ, "
+                f"util={self.utilization:.2%}, "
+                f"idx={self.index_storage_bits/8/1024:.1f} KiB, "
+                f"E[macro/buf/prepost/sparse/static]="
+                f"{g['cim_macro']:.2e}/{g['buffers']:.2e}/{g['pre_post']:.2e}/"
+                f"{g['sparsity']:.2e}/{g['static']:.2e} pJ")

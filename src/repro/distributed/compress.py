@@ -1,0 +1,58 @@
+"""Gradient compression for cross-pod reductions.
+
+Block-wise symmetric int8 quantisation with deterministic-seeded
+stochastic rounding.  At multi-pod scale the pod-axis all-reduce crosses
+the slow DCI links; quantising the pod-crossing reduction to int8 cuts
+that traffic 4× (the "data"-axis reduction inside a pod stays bf16/f32).
+
+Applied in the train step as quantise→dequantise around the gradient
+(XLA then reduces the re-expanded tensor; on real multi-pod deployments
+the quantised payload itself is what crosses the DCI — we model the
+numerics faithfully and the dry-run's collective bytes reflect the
+uncompressed in-pod schedule; see DESIGN.md).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["quantize_int8_stochastic", "dequantize_int8",
+           "compress_decompress_grads"]
+
+_BLOCK = 256
+
+
+def quantize_int8_stochastic(x: jnp.ndarray, key) -> tuple:
+    """Block-wise symmetric int8 with stochastic rounding."""
+    flat = x.reshape(-1).astype(jnp.float32)
+    pad = (-flat.size) % _BLOCK
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, _BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    scaled = blocks / scale
+    noise = jax.random.uniform(key, scaled.shape) - 0.5
+    q = jnp.clip(jnp.round(scaled + noise), -127, 127).astype(jnp.int8)
+    return q, scale, x.shape, pad
+
+
+def dequantize_int8(q, scale, shape, pad) -> jnp.ndarray:
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    if pad:
+        flat = flat[:-pad]
+    return flat.reshape(shape)
+
+
+def compress_decompress_grads(grads: Any, seed: int = 0) -> Any:
+    """Round-trip every gradient leaf through int8 (numerics of a
+    compressed cross-pod all-reduce)."""
+    leaves, treedef = jax.tree.flatten(grads)
+    keys = jax.random.split(jax.random.PRNGKey(seed), len(leaves))
+    out = []
+    for leaf, key in zip(leaves, keys):
+        q, s, shape, pad = quantize_int8_stochastic(leaf, key)
+        out.append(dequantize_int8(q, s, shape, pad).astype(leaf.dtype))
+    return jax.tree.unflatten(treedef, out)

@@ -1,0 +1,78 @@
+"""FullBlock block-sparse matmul Pallas TPU kernel.
+
+TPU-native adaptation of the paper's CIM weight-sparsity execution
+(§III-B): FullBlock-pruned weights are stored *densely* as the gathered
+list of surviving (bm × bn) blocks per output-column group, plus a block
+index that routes the right input slice to each block — the analogue of
+the CIM accelerator's block-index memory directing inputs to array rows.
+
+Layout (built by :func:`repro.kernels.ops.compress_fullblock`):
+
+* ``w_comp``: (Gn, L, bm, bn) — for each of Gn output-column groups, its
+  L surviving K-blocks (L = max over groups, padded).
+* ``idx``:    (Gn, L) int32 — source K-block index per slot, -1 padding.
+
+Grid: (B/TB, Gn).  Each program owns one (input-row tile × output-column
+group) cell and loops its L blocks, dynamic-slicing the input from VMEM.
+``bm``/``bn`` should be multiples of the MXU tile (128) in production;
+interpret-mode tests exercise smaller shapes too.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["block_sparse_matmul_pallas"]
+
+
+def _kernel(idx_ref, x_ref, w_ref, o_ref):
+    TB = x_ref.shape[0]
+    L, bm, bn = w_ref.shape[1], w_ref.shape[2], w_ref.shape[3]
+
+    def body(l, acc):
+        i = idx_ref[0, l]
+        valid = i >= 0
+        start = jnp.maximum(i, 0) * bm
+        xb = pl.load(x_ref, (slice(None), pl.dslice(start, bm)))
+        part = jnp.dot(xb, w_ref[0, l], preferred_element_type=jnp.float32)
+        return acc + jnp.where(valid, part, jnp.zeros_like(part))
+
+    acc = jax.lax.fori_loop(
+        0, L, body, jnp.zeros((TB, bn), jnp.float32))
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_b", "interpret"))
+def block_sparse_matmul_pallas(
+    x: jnp.ndarray,        # (B, K)
+    w_comp: jnp.ndarray,   # (Gn, L, bm, bn)
+    idx: jnp.ndarray,      # (Gn, L) int32
+    *,
+    tile_b: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    B, K = x.shape
+    Gn, L, bm, bn = w_comp.shape
+    if K % bm:
+        raise ValueError(f"K={K} not a multiple of block rows {bm}")
+    TB = min(tile_b, B)
+    pad_b = (-B) % TB
+    if pad_b:
+        x = jnp.pad(x, ((0, pad_b), (0, 0)))
+    Bp = x.shape[0]
+    out = pl.pallas_call(
+        _kernel,
+        grid=(Bp // TB, Gn),
+        in_specs=[
+            pl.BlockSpec((1, L), lambda b, j: (j, 0)),
+            pl.BlockSpec((TB, K), lambda b, j: (b, 0)),
+            pl.BlockSpec((1, L, bm, bn), lambda b, j: (j, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((TB, bn), lambda b, j: (b, j)),
+        out_shape=jax.ShapeDtypeStruct((Bp, Gn * bn), x.dtype),
+        interpret=interpret,
+    )(idx, x, w_comp)
+    return out[:B]

@@ -1,0 +1,422 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ^ MUST precede every other import (jax locks device count on first init).
+# (No `from __future__ import annotations` here for the same reason: the
+#  XLA_FLAGS assignment must be the first statements of the module.)
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this lowers the appropriate step function (train_step /
+prefill / serve_step) against ShapeDtypeStruct inputs on the production
+mesh, compiles it, and records:
+
+* ``compiled.memory_analysis()``  — bytes per device (proves it fits);
+* ``compiled.cost_analysis()``    — HLO FLOPs / bytes for §Roofline;
+* collective bytes by op kind     — parsed from the optimized HLO.
+
+Results append to a JSONL ledger (``--out``), one record per cell, so an
+interrupted matrix run resumes where it stopped (``--skip-done``).
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3-8b --cell train_4k
+  python -m repro.launch.dryrun --all --mesh both --out results/dryrun.jsonl
+"""
+import argparse
+import functools
+import json
+import re
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import all_configs, cells_for, get_config
+from ..configs.base import ArchConfig, ShapeCell, SHAPE_CELLS
+from ..distributed import sharding as shard_rules
+from ..distributed.sharding import (batch_spec, cache_specs, spec_for_param,
+                                    tree_shardings)
+from ..models.transformer import decode_step, forward, init_cache, init_params, prefill
+from ..train.optimizer import AdamWConfig, adamw_init
+from ..train.step import make_train_step
+
+__all__ = ["input_specs", "lower_cell", "run_cell", "main"]
+
+
+# ---------------------------------------------------------------------------
+# ShapeDtypeStruct inputs (weak-type-correct, shardable, zero allocation)
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def param_struct(cfg: ArchConfig, dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        functools.partial(init_params, cfg, dtype=dtype),
+        jax.random.PRNGKey(0))
+
+
+def input_specs(cfg: ArchConfig, cell: ShapeCell) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of a cell."""
+    B, S = cell.global_batch, cell.seq_len
+    d = cfg.d_model
+    if cell.kind == "train":
+        batch = {"tokens": _sds((B, S), jnp.int32),
+                 "labels": _sds((B, S), jnp.int32)}
+        if cfg.prefix_len:
+            batch["prefix_embed"] = _sds((B, cfg.prefix_len, d), jnp.bfloat16)
+        if cfg.enc_dec:
+            batch["enc_embed"] = _sds((B, cfg.enc_seq, d), jnp.bfloat16)
+        return {"batch": batch}
+    if cell.kind == "prefill":
+        out = {"tokens": _sds((B, S), jnp.int32)}
+        if cfg.prefix_len:
+            out["prefix_embed"] = _sds((B, cfg.prefix_len, d), jnp.bfloat16)
+        if cfg.enc_dec:
+            out["enc_embed"] = _sds((B, cfg.enc_seq, d), jnp.bfloat16)
+        return out
+    # decode: one new token against a cache of length S
+    cache = jax.eval_shape(
+        functools.partial(init_cache, cfg, B, S, dtype=jnp.bfloat16))
+    return {"tokens": _sds((B,), jnp.int32), "cache": cache}
+
+
+# ---------------------------------------------------------------------------
+# Cell lowering
+# ---------------------------------------------------------------------------
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def lower_cell(cfg: ArchConfig, cell: ShapeCell, mesh, *,
+               multi_pod: bool, remat: bool = True,
+               microbatches: int = 1, remat_policy: str = "minimal"):
+    """Lower one cell on ``mesh``; returns the jax Lowered object."""
+    params_t = param_struct(cfg)
+    p_shard = tree_shardings(mesh, params_t)
+    bsp = batch_spec(multi_pod=multi_pod)
+    baxes = bsp[0]
+
+    if cell.kind == "train":
+        opt_t = jax.eval_shape(adamw_init, params_t)
+        # ZeRO-1: optimizer m/v always take the fsdp=True (data-augmented)
+        # specs — they are touched once per step, so the extra gather cost
+        # is tiny next to the footprint win.
+        o_shard = tree_shardings(
+            mesh, opt_t,
+            fsdp=True if shard_rules.get_options().zero1 else None)
+        specs = input_specs(cfg, cell)
+        bshard = {}
+        for k, v in specs["batch"].items():
+            nd = len(v.shape)
+            bshard[k] = NamedSharding(mesh, P(*((baxes,) + (None,) * (nd - 1))))
+        step = make_train_step(cfg, AdamWConfig(), remat=remat,
+                               microbatches=microbatches,
+                               remat_policy=remat_policy)
+        with jax.set_mesh(mesh):
+            lowered = jax.jit(
+                step,
+                in_shardings=(p_shard, o_shard, bshard),
+                donate_argnums=(0, 1),
+            ).lower(params_t, opt_t, specs["batch"])
+        return lowered
+
+    if cell.kind == "prefill":
+        specs = input_specs(cfg, cell)
+        arg_shards = {}
+        for k, v in specs.items():
+            nd = len(v.shape)
+            arg_shards[k] = NamedSharding(mesh, P(*((baxes,) + (None,) * (nd - 1))))
+
+        def prefill_fn(params, inputs):
+            kw = {k: v for k, v in inputs.items() if k != "tokens"}
+            return prefill(params, inputs["tokens"], cfg, **kw)
+
+        with jax.set_mesh(mesh):
+            lowered = jax.jit(
+                prefill_fn, in_shardings=(p_shard, arg_shards),
+            ).lower(params_t, specs)
+        return lowered
+
+    # decode
+    specs = input_specs(cfg, cell)
+    c_specs = cache_specs(cfg, cell, multi_pod=multi_pod)
+    cache_t = specs["cache"]
+    c_shard = {}
+    for k, v in cache_t.items():
+        c_shard[k] = NamedSharding(mesh, c_specs.get(k, P()))
+    data_size = 16 * (2 if multi_pod else 1)
+    tok_spec = P(baxes) if cell.global_batch >= data_size else P(None)
+    tok_shard = NamedSharding(mesh, tok_spec)
+
+    def serve_step(params, tokens, cache):
+        return decode_step(params, tokens, cfg, cache)
+
+    with jax.set_mesh(mesh):
+        lowered = jax.jit(
+            serve_step,
+            in_shardings=(p_shard, tok_shard, c_shard),
+            donate_argnums=(2,),
+        ).lower(params_t, specs["tokens"], cache_t)
+    return lowered
+
+
+# ---------------------------------------------------------------------------
+# Collective-byte extraction from optimized HLO
+# ---------------------------------------------------------------------------
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(sig: str) -> int:
+    """Sum byte sizes of every typed shape in an HLO result signature."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(sig):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-kind result bytes from an (optimized) HLO dump."""
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r"(?:ROOT )?[%\w.\-]+ = (.+?) (\S+)\(", ls)
+        if not m:
+            continue
+        sig, opname = m.group(1), m.group(2)
+        for kind in _COLLECTIVES:
+            if opname == kind or opname.startswith(kind + "-start") \
+               or opname == kind + "-done":
+                if opname.endswith("-done"):
+                    break  # counted at -start
+                out[kind] += _shape_bytes(sig)
+                out["count"] += 1
+                break
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Cell execution + ledger
+# ---------------------------------------------------------------------------
+
+def _cost_of(compiled) -> Tuple[float, float, Dict[str, int]]:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    coll = collective_bytes(compiled.as_text())
+    return (float(cost.get("flops", 0.0)),
+            float(cost.get("bytes accessed", 0.0)), coll)
+
+
+def run_cell(arch: str, cell_name: str, mesh_kind: str, *,
+             remat: bool = True, microbatches: int = 1,
+             extra_tag: str = "", remat_policy: str = "minimal",
+             ffn_compress: float = 0.0) -> Dict[str, Any]:
+    """Lower+compile one cell, plus the L=1/L=2 unrolled variants used to
+    extrapolate exact per-layer FLOPs / bytes / collective traffic (XLA
+    cost analysis counts a rolled scan body once, so the full-L program's
+    raw numbers undercount by ~L×)."""
+    import dataclasses as _dc
+
+    from ..models import transformer as _tf
+
+    cfg = get_config(arch)
+    if ffn_compress > 0:
+        # FullBlock row-compressed FFN execution: pruned rows of w_up/
+        # w_gate (and cols of w_down) are removed entirely — on TPU the
+        # static block indices fold into the weight layout at compile
+        # time, so compressed execution IS a smaller dense matmul (the
+        # alignment argument of paper §III-D).
+        keep = 1.0 - ffn_compress
+        cfg = _dc.replace(
+            cfg, d_ff=max(256, int(round(cfg.d_ff * keep / 256)) * 256))
+    cell = SHAPE_CELLS[cell_name]
+    multi_pod = mesh_kind == "multi"
+    from .mesh import make_production_mesh
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = 512 if multi_pod else 256
+
+    # --- full-size compile: THE dry-run proof + memory analysis -----------
+    t0 = time.time()
+    lowered = lower_cell(cfg, cell, mesh, multi_pod=multi_pod, remat=remat,
+                         microbatches=microbatches, remat_policy=remat_policy)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    mem = compiled.memory_analysis()
+    flops_raw, bytes_raw, coll_raw = _cost_of(compiled)
+
+    # --- per-layer extrapolation via unrolled L=1 / L=2 variants -----------
+    from ..models import layers as _ly
+
+    def measure(n_layers: int):
+        kw = dict(n_layers=n_layers)
+        if cfg.enc_dec:
+            kw["enc_layers"] = n_layers
+        cfg_l = _dc.replace(cfg, **kw)
+        with _tf.scan_unroll(max(2, n_layers)), _ly.chunk_unroll(8):
+            low = lower_cell(cfg_l, cell, mesh, multi_pod=multi_pod,
+                             remat=remat, microbatches=microbatches,
+                             remat_policy=remat_policy)
+            return _cost_of(low.compile())
+
+    L = cfg.n_layers
+    f1, b1, c1 = measure(1)
+    f2, b2, c2 = measure(2)
+    flops = f1 + (L - 1) * max(f2 - f1, 0.0)
+    bytes_acc = b1 + (L - 1) * max(b2 - b1, 0.0)
+    coll = {}
+    for k in set(c1) | set(c2):
+        coll[k] = int(c1.get(k, 0) + (L - 1) * max(c2.get(k, 0) - c1.get(k, 0), 0))
+
+    rec = {
+        "arch": arch,
+        "cell": cell_name,
+        "mesh": mesh_kind,
+        "tag": extra_tag,
+        "chips": n_chips,
+        "kind": cell.kind,
+        "seq_len": cell.seq_len,
+        "global_batch": cell.global_batch,
+        # per-device program totals (extrapolated to all L layers)
+        "flops": flops,
+        "bytes_accessed": bytes_acc,
+        "collective_bytes": coll,
+        # raw rolled-scan numbers kept for reference
+        "flops_raw": flops_raw,
+        "bytes_raw": bytes_raw,
+        "collective_raw": {k: int(v) for k, v in coll_raw.items()},
+        "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+        "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+        "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+        "peak_bytes": int(getattr(mem, "peak_memory_in_bytes",
+                                  getattr(mem, "temp_size_in_bytes", 0))),
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+    }
+    return rec
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None, help="architecture id")
+    ap.add_argument("--cell", default=None, choices=list(SHAPE_CELLS))
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true",
+                    help="run the full arch × cell matrix")
+    ap.add_argument("--out", default="results/dryrun.jsonl")
+    ap.add_argument("--skip-done", action="store_true")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--tag", default="")
+    # sharding-strategy knobs (§Perf hillclimb)
+    ap.add_argument("--fsdp", action="store_true",
+                    help="shard params over 'data' too (FSDP/ZeRO-3)")
+    ap.add_argument("--no-zero1", action="store_true",
+                    help="disable ZeRO-1 optimizer-state sharding")
+    ap.add_argument("--no-ep", action="store_true",
+                    help="disable shard_map expert parallelism")
+    ap.add_argument("--legacy-sharding", action="store_true",
+                    help="legacy head_dim attention fallback sharding")
+    ap.add_argument("--remat-policy", default="minimal",
+                    choices=["minimal", "dots", "nothing"],
+                    help="activation-checkpoint policy for train cells")
+    ap.add_argument("--scores-bf16", action="store_true",
+                    help="materialise attention score tiles in bf16 "
+                         "(approximates the fused Pallas flash kernel's "
+                         "HBM behaviour)")
+    ap.add_argument("--ffn-compress", type=float, default=0.0,
+                    help="execute with FullBlock row-compressed FFN at "
+                         "this sparsity ratio (the paper's technique in "
+                         "the execution plane): d_ff → (1-r)·d_ff")
+    args = ap.parse_args(argv)
+
+    if args.scores_bf16:
+        from ..models.layers import set_scores_dtype
+        set_scores_dtype(jnp.bfloat16)
+
+    shard_rules.set_options(
+        fsdp=args.fsdp,
+        # ZeRO-1 rides with FSDP (matched layouts); standalone ZeRO-1
+        # triggers GSPMD replicate-then-partition resharding (§Perf)
+        zero1=args.fsdp and not args.no_zero1,
+        ep_shardmap=not args.no_ep,
+        attn_kv_fallback="head_dim" if args.legacy_sharding else "replicate",
+    )
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    done = set()
+    if args.skip_done and os.path.exists(args.out):
+        with open(args.out) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                    done.add((r["arch"], r["cell"], r["mesh"], r.get("tag", "")))
+                except json.JSONDecodeError:
+                    pass
+
+    jobs = []
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        for arch, cfg in all_configs().items():
+            for cell_name in cells_for(cfg):
+                for mk in meshes:
+                    jobs.append((arch, cell_name, mk))
+    else:
+        if not args.arch or not args.cell:
+            ap.error("--arch and --cell required unless --all")
+        cfg = get_config(args.arch)
+        if args.cell not in cells_for(cfg):
+            print(f"SKIP {args.arch}/{args.cell}: long_500k needs "
+                  "sub-quadratic attention (see DESIGN.md §3.2)")
+            return 0
+        jobs = [(args.arch, args.cell, mk) for mk in meshes]
+
+    failures = 0
+    for arch, cell_name, mk in jobs:
+        if (arch, cell_name, mk, args.tag) in done:
+            print(f"skip (done): {arch} {cell_name} {mk}")
+            continue
+        print(f"=== {arch} × {cell_name} × {mk} ===", flush=True)
+        try:
+            rec = run_cell(arch, cell_name, mk, remat=not args.no_remat,
+                           extra_tag=args.tag, remat_policy=args.remat_policy,
+                           ffn_compress=args.ffn_compress)
+            print(f"    flops={rec['flops']:.3e} bytes={rec['bytes_accessed']:.3e} "
+                  f"coll={sum(v for k, v in rec['collective_bytes'].items() if k != 'count'):.3e} "
+                  f"peak/device={rec['peak_bytes']/2**30:.2f} GiB "
+                  f"compile={rec['compile_s']}s", flush=True)
+        except Exception as e:  # noqa: BLE001 — ledger records failures
+            rec = {"arch": arch, "cell": cell_name, "mesh": mk,
+                   "tag": args.tag, "error": f"{type(e).__name__}: {e}"}
+            failures += 1
+            print(f"    FAILED: {rec['error'][:300]}", flush=True)
+        with open(args.out, "a") as f:
+            f.write(json.dumps(rec) + "\n")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

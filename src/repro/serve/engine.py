@@ -1,0 +1,120 @@
+"""Batched serving engine: continuous-batching-lite over a fixed slot pool.
+
+``ServeEngine`` owns a prefill function and a decode step (both jitted
+once at fixed shapes — slot count and max length — so serving never
+recompiles).  Requests occupy slots; every engine step decodes one token
+for all active slots; finished slots (EOS or max tokens) free and refill
+from the queue.  This is the standard static-shape continuous batching
+pattern for TPU serving.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..models.transformer import decode_step, forward, init_cache, prefill
+
+__all__ = ["Request", "ServeEngine"]
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray              # (S,) int32
+    max_new_tokens: int = 16
+    eos_id: int = -1                # -1 = never
+    # filled by the engine:
+    output: Optional[List[int]] = None
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg: ArchConfig, params, *, slots: int = 4,
+                 max_len: int = 256, greedy: bool = True,
+                 dtype=jnp.float32):
+        self.cfg, self.params = cfg, params
+        self.slots, self.max_len = slots, max_len
+        self.greedy = greedy
+        self.cache = init_cache(cfg, slots, max_len, dtype=dtype)
+        self.slot_req: List[Optional[Request]] = [None] * slots
+        self.slot_remaining = np.zeros(slots, np.int64)
+        self.slot_pos = np.zeros(slots, np.int64)     # per-slot lengths
+        self.queue: List[Request] = []
+        self._decode = jax.jit(
+            lambda p, t, c: decode_step(p, t, cfg, c))
+        self._last_tokens = np.zeros(slots, np.int32)
+
+    # -- request management --------------------------------------------------
+    def submit(self, req: Request) -> None:
+        req.output = []
+        self.queue.append(req)
+
+    def _fill_slots(self) -> None:
+        for s in range(self.slots):
+            if self.slot_req[s] is None and self.queue:
+                req = self.queue.pop(0)
+                self._prefill_slot(s, req)
+
+    def _prefill_slot(self, s: int, req: Request) -> None:
+        """Per-slot prefill: run the prompt, merge its KV into the pool.
+
+        Uses a batch-1 prefill then scatters into the slot's cache lanes;
+        per-slot variable positions are tracked host-side (static shapes,
+        no recompile).
+        """
+        prompt = jnp.asarray(req.prompt, jnp.int32)[None]
+        S = prompt.shape[1]
+        if S >= self.max_len:
+            raise ValueError(f"prompt {S} ≥ max_len {self.max_len}")
+        logits, pc = prefill(self.params, prompt, self.cfg)
+        for key in ("k", "v"):
+            if key in self.cache:
+                upd = pc[key]  # (L, 1, S, H, hd)
+                self.cache[key] = jax.lax.dynamic_update_slice(
+                    self.cache[key], upd.astype(self.cache[key].dtype),
+                    (0, s, 0, 0, 0))
+        if "ssm" in self.cache:
+            self.cache["ssm"] = self.cache["ssm"].at[:, s].set(pc["ssm"][:, 0])
+            self.cache["conv"] = self.cache["conv"].at[:, s].set(
+                pc["conv"][:, 0].astype(self.cache["conv"].dtype))
+        tok = int(jnp.argmax(logits[0, -1]))
+        req.output.append(tok)
+        self._last_tokens[s] = tok
+        self.slot_req[s] = req
+        self.slot_remaining[s] = req.max_new_tokens - 1
+        self.slot_pos[s] = S
+
+    # -- decoding ------------------------------------------------------------
+    def step(self) -> int:
+        """Decode one token for all active slots; returns #active."""
+        self._fill_slots()
+        active = [s for s in range(self.slots) if self.slot_req[s] is not None]
+        if not active:
+            return 0
+        # per-slot positions: each slot decodes at its own cache length
+        self.cache["pos"] = jnp.asarray(self.slot_pos, jnp.int32)
+        tokens = jnp.asarray(self._last_tokens)
+        logits, self.cache = self._decode(self.params, tokens, self.cache)
+        next_tokens = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        for s in active:
+            req = self.slot_req[s]
+            tok = int(next_tokens[s])
+            req.output.append(tok)
+            self._last_tokens[s] = tok
+            self.slot_pos[s] += 1
+            self.slot_remaining[s] -= 1
+            if (self.slot_remaining[s] <= 0 or tok == req.eos_id
+                    or self.slot_pos[s] >= self.max_len - 1):
+                req.done = True
+                self.slot_req[s] = None
+        return len(active)
+
+    def run(self) -> None:
+        """Drain queue + slots."""
+        while self.queue or any(r is not None for r in self.slot_req):
+            self.step()

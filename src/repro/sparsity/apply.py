@@ -1,0 +1,116 @@
+"""FlexBlock sparsity on live model parameters (execution plane).
+
+Bridges the paper's pruning workflow (core.pruning) to the JAX models:
+
+* ``prune_params`` — walk a model's stacked layer weights, generate a
+  FlexBlock mask per 2-D weight matrix (per layer), apply it, and return
+  (pruned_params, masks).  Masks plug into ``make_train_step(masks=…)``
+  for sparse fine-tuning where pruned weights stay exactly zero.
+* ``sparsity_report`` — per-tensor density accounting.
+* ``cim_cost_of_model`` — lower the arch to a CIMinus workload and cost
+  it on a CIM architecture (modeling plane round-trip).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..core.costmodel import compare, dense_baseline, simulate
+from ..core.flexblock import FlexBlockSpec
+from ..core.mapping import default_mapping
+from ..core.pruning import flexblock_mask
+from ..core.workload import lm_workload
+
+__all__ = ["PRUNABLE_KEYS", "prune_params", "sparsity_report",
+           "cim_cost_of_model"]
+
+# stacked layer weights eligible for FlexBlock pruning (2-D per layer);
+# biases/norms/ssm dynamics params are never pruned.
+PRUNABLE_KEYS = ("w_gate", "w_up", "w_down", "w_in", "w_out",
+                 "wq", "wk", "wv", "wo")
+
+
+def _as_matrix(w: np.ndarray) -> Tuple[np.ndarray, Tuple[int, ...]]:
+    """Collapse a (possibly >2-D) weight to 2-D (in_features, out)."""
+    shape = w.shape
+    if w.ndim == 2:
+        return w, shape
+    return w.reshape(shape[0], -1), shape
+
+
+def prune_params(
+    params: Dict[str, Any],
+    spec: FlexBlockSpec,
+    *,
+    criterion: str = "l1",
+    align_cols: bool = False,
+    keys: Tuple[str, ...] = PRUNABLE_KEYS,
+) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    """Prune every eligible stacked layer weight; returns (params, masks).
+
+    The masks pytree mirrors ``params['layers']`` (None for untouched
+    leaves) so it can be passed straight to ``make_train_step``.
+    """
+    layers = params["layers"]
+    new_layers = dict(layers)
+    masks: Dict[str, Any] = {"layers": {}}
+    for name, w in layers.items():
+        if name not in keys:
+            masks["layers"][name] = None
+            continue
+        w_np = np.asarray(w)
+        L = w_np.shape[0]
+        per_layer = []
+        for l in range(L):
+            mat, orig = _as_matrix(w_np[l])
+            if mat.ndim != 2 or 1 in mat.shape:
+                per_layer.append(np.ones_like(mat, dtype=np.uint8))
+                continue
+            m = flexblock_mask(jnp.asarray(mat), spec, criterion,
+                               align_cols=align_cols)
+            per_layer.append(m)
+        mask = np.stack(per_layer).reshape(w_np.shape)
+        masks["layers"][name] = mask
+        new_layers[name] = (w * jnp.asarray(mask, dtype=w.dtype))
+    out = dict(params)
+    out["layers"] = new_layers
+    return out, masks
+
+
+def sparsity_report(params: Dict[str, Any],
+                    masks: Dict[str, Any]) -> Dict[str, float]:
+    rep = {}
+    for name, m in masks.get("layers", {}).items():
+        if m is None:
+            continue
+        rep[f"layers/{name}"] = float(np.asarray(m).mean())
+    total_nz = sum(float(np.asarray(m).sum())
+                   for m in masks["layers"].values() if m is not None)
+    total = sum(float(np.asarray(m).size)
+                for m in masks["layers"].values() if m is not None)
+    rep["overall_density"] = total_nz / max(total, 1)
+    return rep
+
+
+def cim_cost_of_model(
+    cfg: ArchConfig,
+    cim_arch,
+    spec: FlexBlockSpec,
+    *,
+    seq_len: int = 128,
+    batch: int = 1,
+    mapping_strategy: str = "duplicate",
+    input_sparsity: Optional[Dict[str, float]] = None,
+):
+    """Modeling-plane round trip: arch → MVM DAG → CIMinus cost report
+    (sparse vs dense baseline)."""
+    wl = lm_workload(cfg, seq_len=seq_len, batch=batch).set_sparsity(spec)
+    mapping = default_mapping(cim_arch, mapping_strategy)
+    rep = simulate(cim_arch, wl, mapping, input_sparsity=input_sparsity)
+    dense = dense_baseline(cim_arch, wl, mapping)
+    return rep, compare(rep, dense)

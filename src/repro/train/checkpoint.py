@@ -1,0 +1,148 @@
+"""Fault-tolerant checkpointing.
+
+Atomic save (write to ``<dir>/tmp.<step>`` then ``os.replace``), step
+metadata + data-pipeline state included, keep-last-N rotation, and
+restore that validates tree structure against a template.  Arrays are
+stored as one ``.npz`` per checkpoint with flattened key paths — no
+external deps, deterministic, and fast enough for the CPU test scale
+(production deployments would swap the array store for a tensorstore
+backend without touching the interface).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import tempfile
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+import jax
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
+           "list_checkpoints"]
+
+_SEP = "::"
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    import ml_dtypes
+
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(
+            str(p.key) if hasattr(p, "key") else str(p.idx) for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype == ml_dtypes.bfloat16:
+            # npz has no native bfloat16: store widened, restore re-casts
+            arr = arr.astype(np.float32)
+        flat[key] = arr
+    return flat
+
+
+def _unflatten_into(template, flat: Dict[str, np.ndarray]):
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, leaf in paths:
+        key = _SEP.join(
+            str(p.key) if hasattr(p, "key") else str(p.idx) for p in path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(
+                f"shape mismatch for {key!r}: ckpt {arr.shape} vs "
+                f"template {leaf.shape}")
+        if hasattr(leaf, "dtype"):
+            import jax.numpy as jnp
+            leaves.append(jnp.asarray(arr).astype(leaf.dtype))
+        else:
+            leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def save_checkpoint(
+    ckpt_dir: str,
+    step: int,
+    params,
+    opt_state=None,
+    *,
+    data_state: Optional[Dict] = None,
+    extra_meta: Optional[Dict] = None,
+    keep: int = 3,
+) -> str:
+    """Atomically write checkpoint for ``step``; returns its path."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:010d}")
+    tmp = tempfile.mkdtemp(prefix=f".tmp_step_{step}_", dir=ckpt_dir)
+    try:
+        np.savez(os.path.join(tmp, "params.npz"), **_flatten(params))
+        if opt_state is not None:
+            np.savez(os.path.join(tmp, "opt_state.npz"), **_flatten(opt_state))
+        meta = {"step": step, "data_state": data_state or {},
+                "extra": extra_meta or {}}
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump(meta, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    _rotate(ckpt_dir, keep)
+    return final
+
+
+def _rotate(ckpt_dir: str, keep: int) -> None:
+    steps = list_checkpoints(ckpt_dir)
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:010d}"),
+                      ignore_errors=True)
+
+
+def list_checkpoints(ckpt_dir: str) -> List[int]:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    steps = []
+    for name in os.listdir(ckpt_dir):
+        m = re.fullmatch(r"step_(\d{10})", name)
+        if m and os.path.exists(os.path.join(ckpt_dir, name, "meta.json")):
+            steps.append(int(m.group(1)))
+    return sorted(steps)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    steps = list_checkpoints(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def restore_checkpoint(
+    ckpt_dir: str,
+    params_template,
+    opt_template=None,
+    *,
+    step: Optional[int] = None,
+) -> Tuple[Any, Any, Dict]:
+    """Restore (params, opt_state, meta); ``step=None`` → latest.
+
+    A checkpoint directory missing ``meta.json`` (crash mid-write before
+    the atomic rename — impossible by construction — or manual damage)
+    is skipped by ``list_checkpoints``, so restart always lands on the
+    last *complete* step.
+    """
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:010d}")
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    p_flat = dict(np.load(os.path.join(path, "params.npz")))
+    params = _unflatten_into(params_template, p_flat)
+    opt_state = None
+    if opt_template is not None:
+        o_flat = dict(np.load(os.path.join(path, "opt_state.npz")))
+        opt_state = _unflatten_into(opt_template, o_flat)
+    return params, opt_state, meta

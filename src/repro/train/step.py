@@ -1,0 +1,128 @@
+"""Loss and train-step construction.
+
+``make_train_step(cfg, opt_cfg)`` returns a pure
+``(params, opt_state, batch) → (params, opt_state, metrics)`` suitable
+for ``jax.jit`` with in/out shardings — the function the multi-pod
+dry-run lowers.  Supports microbatch gradient accumulation (scan over
+microbatches keeps the HLO compact), FlexBlock mask application
+(sparse fine-tuning: masks re-applied after the optimizer step so pruned
+weights stay pruned), and optional int8 gradient compression for the
+cross-pod reduction.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ArchConfig
+from ..distributed.compress import compress_decompress_grads
+from ..distributed.sharding import maybe_shard
+from ..models.transformer import forward
+from .optimizer import AdamWConfig, adamw_update
+
+__all__ = ["cross_entropy_loss", "make_loss_fn", "make_train_step"]
+
+
+def cross_entropy_loss(logits: jnp.ndarray, labels: jnp.ndarray,
+                       mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Token-mean softmax cross entropy; logits (B,S,V), labels (B,S)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        return nll.mean()
+    mask = mask.astype(jnp.float32)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def make_loss_fn(cfg: ArchConfig) -> Callable:
+    """Batch dict → scalar loss.  Batch keys: tokens, labels
+    (+ prefix_embed / enc_embed for stub-frontend archs)."""
+
+    def loss_fn(params, batch, *, remat: bool = False,
+                remat_policy: str = "minimal"):
+        kwargs = {}
+        if cfg.prefix_len:
+            kwargs["prefix_embed"] = batch["prefix_embed"]
+        if cfg.enc_dec:
+            kwargs["enc_embed"] = batch["enc_embed"]
+        logits = forward(params, batch["tokens"], cfg, remat=remat,
+                         remat_policy=remat_policy, **kwargs)
+        if cfg.prefix_len:
+            logits = logits[:, cfg.prefix_len:]
+        return cross_entropy_loss(logits, batch["labels"],
+                                  batch.get("loss_mask"))
+
+    return loss_fn
+
+
+def make_train_step(
+    cfg: ArchConfig,
+    opt_cfg: AdamWConfig,
+    *,
+    microbatches: int = 1,
+    masks: Optional[Any] = None,          # FlexBlock masks pytree (subset)
+    compress_grads: bool = False,         # int8 cross-pod compression
+    remat: bool = False,                  # activation rematerialisation
+    remat_policy: str = "minimal",        # see transformer.REMAT_POLICIES
+) -> Callable:
+    loss_fn = make_loss_fn(cfg)
+
+    def single_grad(params, batch):
+        return jax.value_and_grad(
+            lambda p, b: loss_fn(p, b, remat=remat,
+                                 remat_policy=remat_policy))(params, batch)
+
+    def train_step(params, opt_state, batch):
+        if microbatches > 1:
+            def micro(carry, mb):
+                loss_acc, grad_acc = carry
+                loss, grads = single_grad(params, mb)
+                grad_acc = jax.tree.map(jnp.add, grad_acc, grads)
+                return (loss_acc + loss, grad_acc), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            mbs = jax.tree.map(
+                lambda x: x.reshape((microbatches, -1) + x.shape[1:]), batch)
+            (loss_sum, grads), _ = jax.lax.scan(micro, (0.0, zeros), mbs)
+            loss = loss_sum / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+        else:
+            loss, grads = single_grad(params, batch)
+
+        if compress_grads:
+            grads = compress_decompress_grads(grads)
+        if masks is not None:
+            # sparse fine-tuning: zero grads of pruned weights
+            grads = _apply_masks(grads, masks)
+        new_params, new_opt, metrics = adamw_update(
+            grads, opt_state, params, opt_cfg)
+        if masks is not None:
+            # keep pruned weights exactly zero after the update
+            new_params = _apply_masks(new_params, masks)
+        metrics = dict(metrics, loss=loss)
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def _apply_masks(tree, masks):
+    """Multiply matching subtree leaves by their FlexBlock masks."""
+    def apply(path, leaf):
+        m = masks
+        try:
+            for k in path:
+                m = m[k.key if hasattr(k, "key") else k]
+        except (KeyError, TypeError):
+            return leaf
+        if m is None:
+            return leaf
+        return leaf * jnp.asarray(m, dtype=leaf.dtype)
+
+    return jax.tree_util.tree_map_with_path(apply, tree)

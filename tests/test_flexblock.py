@@ -1,0 +1,134 @@
+"""FlexBlock abstraction: unit + hypothesis property tests (paper §III)."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.flexblock import (FlexBlockSpec, FullBlock, IntraBlock,
+                                  TABLE_II_PATTERNS, column_block,
+                                  column_wise, dense_spec, hybrid, row_block,
+                                  row_wise)
+
+
+# ---------------------------------------------------------------------------
+# Definition conformance
+# ---------------------------------------------------------------------------
+
+def test_fullblock_phi_formula():
+    fb = FullBlock(2, 4, 0.7)
+    # Φ = ⌊(1-r)·(M/m)·(N/n)⌋ (Def. III.2)
+    assert fb.nonzero_blocks((16, 16)) == math.floor(0.3 * 8 * 4)
+
+
+def test_intrablock_phi_formula():
+    ib = IntraBlock(4, 1, 0.5)
+    assert ib.phi == math.floor(0.5 * 4)
+
+
+def test_intrablock_requires_column_blocks():
+    with pytest.raises(ValueError):
+        IntraBlock(2, 2, 0.5)
+
+
+def test_intrablock_rejects_empty_blocks():
+    with pytest.raises(ValueError):
+        IntraBlock(2, 1, 0.9)  # φ = 0
+
+
+def test_composition_limit():
+    with pytest.raises(ValueError):
+        FlexBlockSpec((IntraBlock(2, 1, 0.5), FullBlock(2, 16, 0.5),
+                       FullBlock(4, 16, 0.5)))
+
+
+def test_composition_order_enforced():
+    # FullBlock + FullBlock is a subset of the finer pattern (§III-D)
+    with pytest.raises(ValueError):
+        FlexBlockSpec((FullBlock(2, 16, 0.5), FullBlock(4, 16, 0.5)))
+
+
+def test_integral_multiple_constraint():
+    with pytest.raises(ValueError):
+        FlexBlockSpec((IntraBlock(2, 1, 0.5), FullBlock(3, 16, 0.5)))
+
+
+def test_pattern_set_validation():
+    with pytest.raises(ValueError):
+        IntraBlock(2, 1, 0.5, pattern_set=((1, 1),))  # keeps 2 ≠ φ=1
+    ib = IntraBlock(2, 1, 0.5, pattern_set=((1, 0), (0, 1)))
+    assert len(ib.patterns()) == 2
+
+
+def test_default_pattern_set_is_exhaustive():
+    ib = IntraBlock(4, 1, 0.5)
+    assert len(ib.default_patterns()) == math.comb(4, 2)
+
+
+def test_hybrid_ratio_derivation():
+    spec = hybrid(2, 16, 0.8)
+    # overall density = intra density × fullblock density
+    d = spec.overall_density((1024, 512))
+    assert abs(d - 0.2) < 0.01
+
+
+def test_hybrid_unreachable_ratio():
+    with pytest.raises(ValueError):
+        hybrid(2, 16, 0.3)   # 1:2 alone already gives density 0.5
+
+
+def test_table_ii_patterns_exist():
+    pats = TABLE_II_PATTERNS(0.8)
+    for name in ("row-wise", "row-block", "column-wise", "channel-wise",
+                 "column-block", "1:2+row-block", "1:2+row-wise",
+                 "1:4+row-block"):
+        assert name in pats, name
+
+
+# ---------------------------------------------------------------------------
+# Properties (hypothesis)
+# ---------------------------------------------------------------------------
+
+@given(m=st.integers(1, 8), n=st.integers(1, 8),
+       r=st.floats(0.05, 0.95),
+       gm=st.integers(1, 8), gn=st.integers(1, 8))
+@settings(max_examples=60, deadline=None)
+def test_fullblock_density_bounds(m, n, r, gm, gn):
+    if m * n <= 1:
+        return
+    fb = FullBlock(m, n, r)
+    shape = (m * gm, n * gn)
+    d = FlexBlockSpec((fb,)).overall_density(shape)
+    assert 0.0 <= d <= 1.0
+    # Φ blocks of m·n elements each
+    assert abs(d - fb.nonzero_blocks(shape) / (gm * gn)) < 1e-9
+
+
+@given(m=st.integers(2, 8), r=st.floats(0.05, 0.9),
+       shape=st.tuples(st.integers(2, 6), st.integers(1, 64)))
+@settings(max_examples=60, deadline=None)
+def test_index_bits_nonnegative_and_monotone_in_size(m, r, shape):
+    if math.floor((1.0 - r) * m) < 1:
+        return  # φ = 0 is rejected by the constructor (by design)
+    ib = IntraBlock(m, 1, r)
+    spec = FlexBlockSpec((ib,))
+    small = spec.index_storage_bits((m * shape[0], shape[1]))
+    large = spec.index_storage_bits((m * shape[0] * 2, shape[1]))
+    assert 0 <= small <= large
+
+
+@given(r=st.floats(0.05, 0.95))
+@settings(max_examples=30, deadline=None)
+def test_dense_spec_identity(r):
+    assert dense_spec().overall_density((64, 64)) == 1.0
+    assert dense_spec().index_storage_bits((64, 64)) == 0
+
+
+@given(width=st.sampled_from([8, 16, 32]), r=st.floats(0.1, 0.9))
+@settings(max_examples=30, deadline=None)
+def test_named_patterns_bind(width, r):
+    for spec in (row_wise(r), row_block(r, width), column_wise(r),
+                 column_block(r, width)):
+        b = spec.bind((128, 128))
+        b.validate_for((128, 128))
+        assert 0.0 <= b.overall_density((128, 128)) <= 1.0

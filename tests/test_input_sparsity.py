@@ -1,0 +1,43 @@
+"""Input-sparsity profiling (paper §IV-B pre-simulation analysis)."""
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core.input_sparsity import (analytic_skip_ratio, quantize_int8,
+                                       skippable_bit_ratio)
+
+
+def test_quantize_symmetric():
+    x = jnp.asarray([-1.0, 0.0, 0.5, 1.0])
+    q = np.asarray(quantize_int8(x))
+    assert q.dtype == np.int8
+    assert q[0] == -127 and q[3] == 127 and q[1] == 0
+
+
+def test_all_zero_activations_fully_skippable():
+    q = jnp.zeros((4, 64), jnp.int8)
+    assert skippable_bit_ratio(q, 16) == 1.0
+
+
+def test_dense_activations_not_skippable():
+    q = jnp.full((4, 64), 127, jnp.int8)   # all bits set
+    r = skippable_bit_ratio(q, 16, n_bits=7)
+    assert r == 0.0
+
+
+def test_ratio_decreases_with_group_size():
+    rng = np.random.default_rng(0)
+    acts = rng.normal(size=(32, 256)) * (rng.random((32, 256)) > 0.5)
+    q = quantize_int8(jnp.asarray(acts))
+    r_small = skippable_bit_ratio(q, 8)
+    r_large = skippable_bit_ratio(q, 64)
+    # larger broadcast groups make all-zero planes rarer (§III-B)
+    assert r_large <= r_small
+
+
+def test_analytic_estimate_behaviour():
+    lo = analytic_skip_ratio(0.3, 32)
+    hi = analytic_skip_ratio(0.9, 32)
+    assert 0.0 <= lo < hi <= 1.0
+    # more rows to agree → lower skip probability
+    assert analytic_skip_ratio(0.5, 64) <= analytic_skip_ratio(0.5, 8)

@@ -1,0 +1,130 @@
+"""Launch-layer units that don't need the 512-device dry-run process:
+collective-byte HLO parsing, input spec shapes, mesh construction on the
+local device, roofline math."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import cells_for, get_config
+from repro.configs.base import SHAPE_CELLS
+
+
+def test_collective_bytes_parser():
+    from repro.launch.dryrun import collective_bytes
+    hlo = """
+  %ag = bf16[8,128]{1,0} all-gather(%x), replica_groups={}
+  %ar.1 = f32[256]{0} all-reduce(%y), to_apply=%sum
+  %rs = f32[4,4]{1,0} reduce-scatter(%z), dimensions={0}
+  %a2a = (f32[16]{0}, f32[16]{0}) all-to-all(%p, %q)
+  %cp = u32[10]{0} collective-permute(%w), source_target_pairs={{0,1}}
+  %other = f32[999]{0} add(%a, %b)
+  %ags = bf16[64]{0} all-gather-start(%v)
+  %agd = bf16[64]{0} all-gather-done(%ags)
+"""
+    out = collective_bytes(hlo)
+    assert out["all-gather"] == 8 * 128 * 2 + 64 * 2   # ag + ag-start
+    assert out["all-reduce"] == 256 * 4
+    assert out["reduce-scatter"] == 16 * 4
+    assert out["all-to-all"] == 32 * 4
+    assert out["collective-permute"] == 10 * 4
+    assert out["count"] == 6
+
+
+def test_input_specs_shapes():
+    from repro.launch.dryrun import input_specs
+    cfg = get_config("llama3-8b")
+    cell = SHAPE_CELLS["train_4k"]
+    specs = input_specs(cfg, cell)
+    assert specs["batch"]["tokens"].shape == (256, 4096)
+    cell_d = SHAPE_CELLS["decode_32k"]
+    sd = input_specs(cfg, cell_d)
+    assert sd["tokens"].shape == (128,)
+    assert sd["cache"]["k"].shape == (32, 128, 32768, 8, 128)
+
+    wcfg = get_config("whisper-medium")
+    sw = input_specs(wcfg, SHAPE_CELLS["prefill_32k"])
+    assert sw["enc_embed"].shape == (32, 1500, 1024)
+
+    pcfg = get_config("paligemma-3b")
+    sp = input_specs(pcfg, SHAPE_CELLS["train_4k"])
+    assert sp["batch"]["prefix_embed"].shape == (256, 256, 2048)
+
+
+def test_spec_for_param_divisibility_fallbacks():
+    from repro.distributed.sharding import options, spec_for_param
+    from jax.sharding import PartitionSpec as P
+    # hymba: 25 q heads don't divide 16 → REPLICATE (never shard the
+    # score-contraction head_dim — §Perf it1: hd-sharding on both sides
+    # of the contraction forces score-matrix all-reduces)
+    assert spec_for_param("wq", (32, 1600, 25, 64)) == P(None, None, None, None)
+    assert spec_for_param("wq", (32, 4096, 32, 128)) == P(None, None, "model", None)
+    # legacy mode keeps the old hd fallback for A/B runs
+    with options(attn_kv_fallback="head_dim"):
+        assert spec_for_param("wq", (32, 1600, 25, 64)) == \
+            P(None, None, None, "model")
+    # odd vocab → d_model sharding
+    assert spec_for_param("embed", (51865, 1024)) == P(None, "model")
+    assert spec_for_param("embed", (128256, 4096)) == P("model", None)
+    # MoE experts expert-sharded
+    assert spec_for_param("w_up", (40, 16, 6144, 10752)) == \
+        P(None, "model", None, None)
+    # FSDP adds a "data" axis on the largest free non-layer dim
+    with options(fsdp=True):
+        assert spec_for_param("w_up", (40, 16, 6144, 10752)) == \
+            P(None, "model", None, "data")
+        assert spec_for_param("embed", (128256, 4096)) == P("model", "data")
+
+
+def test_cells_for_skips():
+    assert "long_500k" not in cells_for(get_config("llama3-8b"))
+    assert "long_500k" in cells_for(get_config("mamba2-130m"))
+
+
+def test_roofline_math():
+    from repro.launch.roofline import analyze
+    rec = {
+        "arch": "x", "cell": "train_4k", "mesh": "single", "tag": "",
+        "chips": 256, "kind": "train", "seq_len": 4096, "global_batch": 256,
+        "flops": 1.97e14, "bytes_accessed": 8.19e11,
+        "collective_bytes": {"all-reduce": 5e10, "count": 3},
+        "peak_bytes": 2 ** 30, "params": 8e9, "active_params": 8e9,
+    }
+    a = analyze(rec)
+    assert abs(a["t_compute_s"] - 1.0) < 1e-6
+    assert abs(a["t_memory_s"] - 1.0) < 1e-6
+    assert abs(a["t_collective_s"] - 1.0) < 1e-6
+    assert a["model_flops"] == 6 * 8e9 * 4096 * 256
+    assert a["dominant"] in ("compute", "memory", "collective")
+
+
+def test_make_local_mesh():
+    from repro.launch.mesh import make_local_mesh
+    mesh = make_local_mesh()
+    assert set(mesh.axis_names) == {"data", "model"}
+
+
+def test_tiny_lower_on_local_mesh():
+    """End-to-end lower+compile of a reduced arch on the local 1-device
+    mesh — the same code path the 512-device dry-run exercises."""
+    from repro.launch.mesh import make_local_mesh
+    from repro.train.optimizer import AdamWConfig, adamw_init
+    from repro.train.step import make_train_step
+    from repro.models.transformer import init_params
+
+    cfg = get_config("qwen3-4b").reduced()
+    mesh = make_local_mesh()
+    params = jax.eval_shape(
+        lambda k: init_params(cfg, k, dtype=jnp.float32),
+        jax.random.PRNGKey(0))
+    opt = jax.eval_shape(adamw_init, params)
+    batch = {
+        "tokens": jax.ShapeDtypeStruct((4, 16), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((4, 16), jnp.int32),
+    }
+    step = make_train_step(cfg, AdamWConfig())
+    with jax.set_mesh(mesh):
+        lowered = jax.jit(step).lower(params, opt, batch)
+    compiled = lowered.compile()
+    assert compiled.cost_analysis() is not None

@@ -1,0 +1,103 @@
+"""Pruning workflow tests: Eq. 1 / Eq. 2 semantics (paper §IV-D)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core.flexblock import FlexBlockSpec, FullBlock, IntraBlock, hybrid
+from repro.core.pruning import (block_losses, flexblock_mask, fullblock_mask,
+                                intrablock_mask, prune_matrix)
+
+RNG = np.random.default_rng(42)
+
+
+def test_block_losses_eq1():
+    w = RNG.normal(size=(8, 8)).astype(np.float32)
+    losses = np.asarray(block_losses(jnp.asarray(w), 2, 4, "l1"))
+    expect = np.abs(w).reshape(4, 2, 2, 4).sum(axis=(1, 3))
+    np.testing.assert_allclose(losses, expect, rtol=1e-5)
+
+
+def test_fullblock_keeps_highest_loss_blocks():
+    w = np.zeros((4, 4), np.float32)
+    w[0:2, 0:2] = 10.0      # block (0,0) most important
+    w[2:4, 2:4] = 5.0       # block (1,1) second
+    mask = fullblock_mask(jnp.asarray(w), FullBlock(2, 2, 0.5), "l1")
+    assert mask[0:2, 0:2].all() and mask[2:4, 2:4].all()
+    assert not mask[0:2, 2:4].any() and not mask[2:4, 0:2].any()
+
+
+def test_fullblock_exact_block_count():
+    w = RNG.normal(size=(32, 32)).astype(np.float32)
+    fb = FullBlock(4, 4, 0.75)
+    mask = fullblock_mask(jnp.asarray(w), fb, "l2")
+    blocks = mask.reshape(8, 4, 8, 4).sum(axis=(1, 3))
+    n_kept = (blocks > 0).sum()
+    assert n_kept == fb.nonzero_blocks((32, 32))
+    # kept blocks are fully kept
+    assert set(np.unique(blocks)) <= {0, 16}
+
+
+def test_intrablock_topk_per_block():
+    w = np.arange(8, dtype=np.float32).reshape(8, 1)  # increasing magnitude
+    mask = intrablock_mask(jnp.asarray(w), IntraBlock(4, 1, 0.5))
+    # each 4-block keeps its top-2 magnitudes
+    np.testing.assert_array_equal(mask[:, 0], [0, 0, 1, 1, 0, 0, 1, 1])
+
+
+def test_intrablock_pattern_set_restriction():
+    # only pattern (1,0) allowed: always keep first element, even when the
+    # second is larger
+    w = np.array([[1.0], [100.0]], np.float32)
+    ib = IntraBlock(2, 1, 0.5, pattern_set=((1, 0),))
+    mask = intrablock_mask(jnp.asarray(w), ib)
+    np.testing.assert_array_equal(mask[:, 0], [1, 0])
+
+
+def test_intrablock_align_cols_produces_aligned_mask():
+    w = RNG.normal(size=(16, 8)).astype(np.float32)
+    mask = intrablock_mask(jnp.asarray(w), IntraBlock(4, 1, 0.75),
+                           align_cols=True)
+    mb = mask.reshape(4, 4, 8)
+    assert (mb == mb[:, :, :1]).all()
+
+
+@given(ratio=st.floats(0.1, 0.9), m=st.sampled_from([2, 4, 8]))
+@settings(max_examples=25, deadline=None)
+def test_intrablock_density_matches_phi(ratio, m):
+    import math
+    if math.floor((1.0 - ratio) * m) < 1:
+        return  # φ = 0 rejected by the constructor
+    ib = IntraBlock(m, 1, ratio)
+    w = RNG.normal(size=(m * 8, 16)).astype(np.float32)
+    mask = intrablock_mask(jnp.asarray(w), ib)
+    assert abs(mask.mean() - ib.phi / m) < 1e-9
+
+
+def test_hybrid_mask_density():
+    w = RNG.normal(size=(64, 64)).astype(np.float32)
+    spec = hybrid(2, 16, 0.8)
+    res = prune_matrix(jnp.asarray(w), spec)
+    assert abs(res.density - 0.2) < 0.05
+    # pruned weights exactly zero after apply
+    pruned = np.asarray(res.apply(jnp.asarray(w)))
+    assert (pruned[res.mask == 0] == 0).all()
+
+
+def test_padding_never_protects_blocks():
+    # ragged matrix: padded region has zero importance
+    w = np.ones((5, 5), np.float32)
+    mask = fullblock_mask(jnp.asarray(w), FullBlock(2, 2, 0.5), "l1")
+    assert mask.shape == (5, 5)
+
+
+@given(ratio=st.floats(0.2, 0.8))
+@settings(max_examples=20, deadline=None)
+def test_l1_vs_l2_both_valid(ratio):
+    w = RNG.normal(size=(32, 32)).astype(np.float32)
+    for crit in ("l1", "l2"):
+        m = flexblock_mask(jnp.asarray(w),
+                           FlexBlockSpec((FullBlock(4, 4, ratio),)), crit)
+        assert m.shape == (32, 32)
+        assert 0 < m.mean() < 1

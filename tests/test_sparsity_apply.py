@@ -1,0 +1,66 @@
+"""FlexBlock ↔ execution-plane integration: live-param pruning, sparse
+fine-tuning invariants, modeling-plane round trip."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import hybrid, row_block, usecase_arch
+from repro.models.transformer import init_params
+from repro.sparsity.apply import (cim_cost_of_model, prune_params,
+                                  sparsity_report)
+from repro.train.optimizer import AdamWConfig, adamw_init
+from repro.train.step import make_train_step
+
+CFG = get_config("llama3-8b").reduced()
+
+
+@pytest.fixture(scope="module")
+def pruned():
+    params = init_params(CFG, jax.random.PRNGKey(0), dtype=jnp.float32)
+    return prune_params(params, row_block(0.75, 16))
+
+
+def test_prune_density(pruned):
+    params, masks = pruned
+    rep = sparsity_report(params, masks)
+    assert abs(rep["overall_density"] - 0.25) < 0.08, rep
+    # pruned weights are exactly zero
+    for name, m in masks["layers"].items():
+        if m is None:
+            continue
+        w = np.asarray(params["layers"][name])
+        assert (w[np.asarray(m) == 0] == 0).all()
+
+
+def test_sparse_finetune_keeps_zeros(pruned):
+    params, masks = pruned
+    opt = adamw_init(params)
+    step = jax.jit(make_train_step(CFG, AdamWConfig(lr=1e-2), masks=masks))
+    key = jax.random.PRNGKey(1)
+    batch = {
+        "tokens": jax.random.randint(key, (2, 16), 0, CFG.vocab_size),
+        "labels": jax.random.randint(key, (2, 16), 0, CFG.vocab_size),
+    }
+    p1, o1, m1 = step(params, opt, batch)
+    assert np.isfinite(float(m1["loss"]))
+    for name, m in masks["layers"].items():
+        if m is None:
+            continue
+        w = np.asarray(p1["layers"][name])
+        assert (w[np.asarray(m) == 0] == 0).all(), name
+        # surviving weights did move
+        moved = np.abs(w - np.asarray(params["layers"][name]))[
+            np.asarray(m) == 1].sum()
+        assert moved > 0, name
+
+
+def test_cim_cost_round_trip():
+    arch = usecase_arch(16)
+    rep, cmp = cim_cost_of_model(get_config("qwen3-4b"), arch,
+                                 hybrid(2, 16, 0.8), seq_len=32)
+    assert rep.latency_cycles > 0
+    assert cmp["speedup"] >= 1.0
+    assert cmp["energy_saving"] > 1.0
