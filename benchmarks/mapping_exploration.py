@@ -11,33 +11,37 @@ Paper findings checked: duplication lifts utilisation up to ~7.7× for
 Conv-dominated models and the balanced 4×4 organisation is best
 (Finding 2); rearrangement raises utilisation but can trade energy for
 buffer-access overhead.
+
+Runs on the :mod:`repro.explore` engine with one shared runner: the
+Finding-2 re-probe of the duplicate strategy is a pure cache hit, and
+Fig. 12's dense baselines are shared across rearrangement settings.
 """
 from __future__ import annotations
 
-import time
-from typing import Dict, List
+from typing import Dict, List, Optional
 
-from repro.core import (compare, default_mapping, dense_baseline, hybrid,
-                        resnet50, simulate, sweep_mappings, usecase_arch,
-                        vgg16)
+from repro.core import (compare, default_mapping, hybrid, resnet50,
+                        usecase_arch, vgg16)
+from repro.explore import ExploreJob, SweepRunner, mapping_sweep
 
 __all__ = ["run"]
 
 ORGS = ((8, 2), (4, 4), (2, 8))
 
 
-def run() -> List[Dict]:
+def run(workers: Optional[int] = 1) -> List[Dict]:
     rows: List[Dict] = []
     spec = hybrid(2, 16, 0.8)
+    runner = SweepRunner(workers=workers)
 
     # ---- Fig. 11: strategy × organisation × model --------------------------
     for mname, wl_fn in (("resnet50", lambda: resnet50(32)),
                          ("vgg16", lambda: vgg16(32))):
-        t0 = time.perf_counter()
-        grid = sweep_mappings(
+        result = mapping_sweep(
             lambda org: usecase_arch(16, org), wl_fn, spec,
-            orgs=ORGS, strategies=("spatial", "duplicate"))
-        dt = (time.perf_counter() - t0) / max(len(grid), 1)
+            orgs=ORGS, strategies=("spatial", "duplicate"), runner=runner)
+        grid = result.rows
+        dt = result.stats.wall_s / max(len(grid), 1)
         for g in grid:
             rows.append({
                 "name": f"fig11/{mname}/{g['org']}/{g['mapping']}",
@@ -62,10 +66,10 @@ def run() -> List[Dict]:
 
     # Finding 2 (part 1): for the Conv-dominated model, duplication helps
     # and 4×4 is the best organisation; for FC-heavy VGG16 the benefit
-    # shrinks (less weight reuse).
-    g_r = sweep_mappings(lambda org: usecase_arch(16, org),
-                         lambda: resnet50(32), spec, orgs=ORGS,
-                         strategies=("duplicate",))
+    # shrinks (less weight reuse).  Every job here is already cached.
+    g_r = mapping_sweep(lambda org: usecase_arch(16, org),
+                        lambda: resnet50(32), spec, orgs=ORGS,
+                        strategies=("duplicate",), runner=runner).rows
     best = min(g_r, key=lambda g: g["latency_ms"])
     rows.append({
         "name": "fig11/finding2/best_org_resnet50",
@@ -75,30 +79,47 @@ def run() -> List[Dict]:
     })
 
     # ---- Fig. 12: rearrangement on/off (4×4, hybrid pattern) ---------------
-    for mname, wl_fn in (("resnet50", lambda: resnet50(32)),
-                         ("vgg16", lambda: vgg16(32))):
-        arch = usecase_arch(16, (4, 4))
-        dense = dense_baseline(arch, wl_fn(),
-                               default_mapping(arch, "spatial"))
-        for strat in ("spatial", "duplicate"):
-            for rr, rr_name in ((None, "none"), ("slice", "rearranged")):
-                mapping = default_mapping(
-                    arch, strat, rearrange=rr,
-                    slice_size=arch.macro.sub_rows if rr else 0)
-                wl = wl_fn().set_sparsity(spec)
-                t0 = time.perf_counter()
-                rep = simulate(arch, wl, mapping)
-                dt = time.perf_counter() - t0
-                c = compare(rep, dense)
-                shares = rep.grouped_energy()
-                tot = max(sum(shares.values()), 1e-9)
-                rows.append({
-                    "name": f"fig12/{mname}/{strat}/{rr_name}",
-                    "us_per_call": dt * 1e6,
-                    "latency_ms": round(rep.latency_ms, 4),
-                    "energy_uj": round(rep.total_energy_uj, 2),
-                    "utilization": round(rep.utilization, 4),
-                    "buffer_share": round(shares.get("buffers", 0.0) / tot, 3),
-                    "speedup": round(c["speedup"], 3),
-                })
+    arch = usecase_arch(16, (4, 4))
+    cases = [(mname, wl_fn, strat, rr)
+             for mname, wl_fn in (("resnet50", lambda: resnet50(32)),
+                                  ("vgg16", lambda: vgg16(32)))
+             for strat in ("spatial", "duplicate")
+             for rr in (None, "slice")]
+    jobs = []
+    for mname, wl_fn, strat, rr in cases:
+        mapping = default_mapping(
+            arch, strat, rearrange=rr,
+            slice_size=arch.macro.sub_rows if rr else 0)
+        jobs.append(ExploreJob.simulate(
+            arch, wl_fn().set_sparsity(spec), mapping))
+        jobs.append(ExploreJob.dense(
+            arch, wl_fn(), default_mapping(arch, "spatial")))
+    reports = runner.run(jobs)
+    dt = runner.last_stats.wall_s / max(runner.last_stats.requested, 1)
+    for i, (mname, _, strat, rr) in enumerate(cases):
+        rep, dense = reports[2 * i], reports[2 * i + 1]
+        c = compare(rep, dense)
+        shares = rep.grouped_energy()
+        tot = max(sum(shares.values()), 1e-9)
+        rows.append({
+            "name": f"fig12/{mname}/{strat}/{'rearranged' if rr else 'none'}",
+            "us_per_call": dt * 1e6,
+            "latency_ms": round(rep.latency_ms, 4),
+            "energy_uj": round(rep.total_energy_uj, 2),
+            "utilization": round(rep.utilization, 4),
+            "buffer_share": round(shares.get("buffers", 0.0) / tot, 3),
+            "speedup": round(c["speedup"], 3),
+        })
+
+    s = runner.stats
+    rows.append({
+        "name": "engine/stats",
+        "us_per_call": 0.0,
+        "requested": s.requested,
+        "unique": s.unique,
+        "cache_hits": s.cache_hits,
+        "evaluated": s.evaluated,
+        "workers": s.workers,
+        "wall_s": round(s.wall_s, 2),
+    })
     return rows

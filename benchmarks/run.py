@@ -6,7 +6,12 @@
   mapping_exploration  paper Fig. 11–12         (§VII-C use-case)
 
 Usage:  PYTHONPATH=src python -m benchmarks.run [--only NAME] [--csv FILE]
+                                                [--workers N]
 Each row prints as ``name,us_per_call,<derived...>``.
+
+``--workers`` fans the exploration suites (sparsity / mapping) out
+across processes via the :mod:`repro.explore` engine; their
+``engine/stats`` rows report cache-hit accounting either way.
 """
 from __future__ import annotations
 
@@ -25,6 +30,9 @@ SUITES = {
     "mapping": mapping_exploration.run,
 }
 
+# suites built on the repro.explore engine accept a worker count
+PARALLEL_SUITES = ("sparsity", "mapping")
+
 
 def _fmt(row: Dict) -> str:
     head = f"{row['name']},{row.get('us_per_call', 0.0):.1f}"
@@ -38,6 +46,9 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--only", choices=sorted(SUITES), default=None)
     ap.add_argument("--csv", default=None, help="also write rows to CSV")
+    ap.add_argument("--workers", type=int, default=1,
+                    help="process count for the exploration suites "
+                         "(default 1 = sequential; 0 = one per CPU)")
     args = ap.parse_args(argv)
 
     all_rows: List[Dict] = []
@@ -48,7 +59,11 @@ def main(argv=None) -> int:
         print(f"== {name} ==", flush=True)
         t0 = time.perf_counter()
         try:
-            rows = SUITES[name]()
+            if name in PARALLEL_SUITES:
+                # 0 = one worker per CPU (SweepRunner's None default)
+                rows = SUITES[name](workers=args.workers or None)
+            else:
+                rows = SUITES[name]()
         except Exception as e:  # noqa: BLE001 — report and continue
             print(f"  SUITE FAILED: {type(e).__name__}: {e}", flush=True)
             ok = False

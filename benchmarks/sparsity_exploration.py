@@ -16,19 +16,25 @@ Reproduces the paper's first use-case on the §VII-A architecture
 Paper findings checked here: coarse patterns → higher efficiency, lower
 accuracy proxy; hardware-aligned fine patterns balance both (Finding 1);
 input sparsity adds 1.2–1.4× and amplifies coarse patterns.
+
+All grid points run through the :mod:`repro.explore` engine on one
+shared runner, so every section's dense baselines are computed once and
+repeated configurations (e.g. Fig. 10's weight-only probes at specs
+Fig. 9 already costed) are cache hits.  A final ``engine/stats`` row
+reports the accounting.
 """
 from __future__ import annotations
 
-import time
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 import numpy as np
 
 from repro.core import (TABLE_II_PATTERNS, column_block, compare,
-                        default_mapping, dense_baseline, flexblock_mask,
-                        hybrid, mobilenet_v2, quantize_int8, resnet50,
-                        row_block, simulate, skippable_bit_ratio,
-                        sweep_sparsity, usecase_arch, vgg16)
+                        default_mapping, flexblock_mask, hybrid,
+                        mobilenet_v2, quantize_int8, resnet50, row_block,
+                        skippable_bit_ratio, usecase_arch, vgg16)
+from repro.explore import (ExploreJob, GridPoint, SweepRunner, run_grid,
+                           sparsity_sweep)
 
 __all__ = ["run"]
 
@@ -59,20 +65,22 @@ def _synthetic_skip(group_rows: int, zero_rate: float, *, seed: int = 0,
     return float(skippable_bit_ratio(q, group_rows))
 
 
-def run() -> List[Dict]:
+def run(workers: Optional[int] = 1) -> List[Dict]:
     rows: List[Dict] = []
     arch = usecase_arch(4, input_sparsity=True)
     mapping = default_mapping(arch, "duplicate")
+    runner = SweepRunner(workers=workers)
 
     # ---- Fig. 8: Table II patterns × ratios on ResNet50 -------------------
-    t0 = time.perf_counter()
-    grid = sweep_sparsity(
+    result = sparsity_sweep(
         arch, lambda: resnet50(32), {},
         ratios=(0.5, 0.7, 0.8, 0.9),
         mapping=mapping,
         pattern_factory=lambda r: TABLE_II_PATTERNS(r, c_in=16),
+        runner=runner,
     )
-    dt = (time.perf_counter() - t0) / max(len(grid), 1)
+    grid = result.rows
+    dt = result.stats.wall_s / max(len(grid), 1)
     for g in grid:
         spec = TABLE_II_PATTERNS(g["ratio"], c_in=16)[g["pattern"]]
         rows.append({
@@ -109,25 +117,30 @@ def run() -> List[Dict]:
         "hybrid-1:2+rb16": hybrid(2, 16, 0.8),
         "hybrid-1:4+rb16": hybrid(4, 16, 0.8),
     }
-    dense = dense_baseline(arch, resnet50(32), mapping)
-    for name, spec in size_specs.items():
-        wl = resnet50(32).set_sparsity(spec)
-        t0 = time.perf_counter()
-        rep = simulate(arch, wl, mapping)
-        dt = time.perf_counter() - t0
-        c = compare(rep, dense)
+    points = [
+        GridPoint(
+            ExploreJob.simulate(arch, resnet50(32).set_sparsity(spec), mapping),
+            ExploreJob.dense(arch, resnet50(32), mapping),
+            meta=(("pattern", name), ("ratio", 0.8)),
+        )
+        for name, spec in size_specs.items()
+    ]
+    res9a = run_grid(points, runner=runner)
+    dt = res9a.stats.wall_s / max(len(res9a.rows), 1)
+    for g in res9a.rows:
         rows.append({
-            "name": f"fig9a/{name}",
+            "name": f"fig9a/{g['pattern']}",
             "us_per_call": dt * 1e6,
-            "speedup": round(c["speedup"], 3),
-            "energy_saving": round(c["energy_saving"], 3),
-            "utilization": round(c["utilization"], 3),
-            "l1_preserved": round(_l1_preserved(spec), 4),
+            "speedup": round(g["speedup"], 3),
+            "energy_saving": round(g["energy_saving"], 3),
+            "utilization": round(g["utilization"], 3),
+            "l1_preserved": round(_l1_preserved(size_specs[g["pattern"]]), 4),
         })
 
     # ---- Fig. 9b: across models at 80 % -----------------------------------
     # VGG16 FC layers and MobileNetV2 depthwise convs are pruning-hostile
     # (paper restricts pruning to standard convs there) → conv-only scope.
+    points = []
     for mname, wl_fn, scope in (
             ("resnet50", lambda: resnet50(32), "all"),
             ("vgg16", lambda: vgg16(32), "conv_only"),
@@ -135,32 +148,39 @@ def run() -> List[Dict]:
         spec = hybrid(2, 16, 0.8)
         kinds = ("conv",) if scope == "conv_only" else ("conv", "fc", "matmul")
         wl = wl_fn().set_sparsity(spec, kinds=kinds)
-        dense_m = dense_baseline(arch, wl_fn(), mapping)
-        t0 = time.perf_counter()
-        rep = simulate(arch, wl, mapping)
-        dt = time.perf_counter() - t0
-        c = compare(rep, dense_m)
+        points.append(GridPoint(
+            ExploreJob.simulate(arch, wl, mapping),
+            ExploreJob.dense(arch, wl_fn(), mapping),
+            meta=(("pattern", mname), ("scope", scope)),
+        ))
+    res9b = run_grid(points, runner=runner)
+    dt = res9b.stats.wall_s / max(len(res9b.rows), 1)
+    for g in res9b.rows:
         rows.append({
-            "name": f"fig9b/{mname}",
+            "name": f"fig9b/{g['pattern']}",
             "us_per_call": dt * 1e6,
-            "speedup": round(c["speedup"], 3),
-            "energy_saving": round(c["energy_saving"], 3),
-            "scope": scope,
+            "speedup": round(g["speedup"], 3),
+            "energy_saving": round(g["energy_saving"], 3),
+            "scope": g["scope"],
         })
 
     # ---- Fig. 10: input sparsity ------------------------------------------
-    # Dense models + input sparsity: paper reports 1.2–1.4×.
-    for mname, wl_fn, zr in (("resnet50", lambda: resnet50(32), 0.45),
-                             ("vgg16", lambda: vgg16(32), 0.40),
-                             ("mobilenetv2", lambda: mobilenet_v2(32), 0.35)):
+    # Dense models + input sparsity: paper reports 1.2–1.4×.  Raw jobs via
+    # the runner: each point needs rep-vs-dense AND rep-vs-rep comparisons.
+    jobs = []
+    model_zr = (("resnet50", lambda: resnet50(32), 0.45),
+                ("vgg16", lambda: vgg16(32), 0.40),
+                ("mobilenetv2", lambda: mobilenet_v2(32), 0.35))
+    for mname, wl_fn, zr in model_zr:
         wl = wl_fn()
         sr = _synthetic_skip(arch.macro.sub_rows, zr)
         skip = {op.name: sr for op in wl.mvm_ops()}
-        dense_m = dense_baseline(arch, wl, mapping)
-        t0 = time.perf_counter()
-        rep = simulate(arch, wl, mapping, input_sparsity=skip)
-        dt = time.perf_counter() - t0
-        c = compare(rep, dense_m)
+        jobs.append(ExploreJob.simulate(arch, wl, mapping, input_sparsity=skip))
+        jobs.append(ExploreJob.dense(arch, wl_fn(), mapping))
+    reports = runner.run(jobs)
+    dt = runner.last_stats.wall_s / max(runner.last_stats.requested, 1)
+    for i, (mname, _, _) in enumerate(model_zr):
+        c = compare(reports[2 * i], reports[2 * i + 1])
         rows.append({
             "name": f"fig10/dense+{mname}",
             "us_per_call": dt * 1e6,
@@ -171,18 +191,22 @@ def run() -> List[Dict]:
 
     # weight patterns × input sparsity at 80 % (coarse skips more: the
     # skippable ratio shrinks as more rows share one array row)
-    for pname, spec, group_mult in (
-            ("column-wise", TABLE_II_PATTERNS(0.8, c_in=16)["column-wise"], 1.0),
-            ("row-block", row_block(0.8, 16), 1.0),
-            ("1:2+row-block", hybrid(2, 16, 0.8), 2.0)):
+    pat_cfg = (("column-wise", TABLE_II_PATTERNS(0.8, c_in=16)["column-wise"], 1.0),
+               ("row-block", row_block(0.8, 16), 1.0),
+               ("1:2+row-block", hybrid(2, 16, 0.8), 2.0))
+    jobs = []
+    for pname, spec, group_mult in pat_cfg:
         wl = resnet50(32).set_sparsity(spec)
         # IntraBlock routing broadcasts ``intra.m`` inputs per row → the
         # effective OR-group widens, shrinking the skippable ratio
         sr = _synthetic_skip(int(arch.macro.sub_rows * group_mult), 0.45)
         skip = {op.name: sr for op in wl.mvm_ops()}
-        dense_m = dense_baseline(arch, resnet50(32), mapping)
-        rep_w = simulate(arch, wl, mapping)
-        rep_wi = simulate(arch, wl, mapping, input_sparsity=skip)
+        jobs.append(ExploreJob.simulate(arch, wl, mapping))
+        jobs.append(ExploreJob.simulate(arch, wl, mapping, input_sparsity=skip))
+        jobs.append(ExploreJob.dense(arch, resnet50(32), mapping))
+    reports = runner.run(jobs)
+    for i, (pname, _, _) in enumerate(pat_cfg):
+        rep_w, rep_wi, dense_m = reports[3 * i:3 * i + 3]
         cw, cwi = compare(rep_w, dense_m), compare(rep_wi, dense_m)
         rows.append({
             "name": f"fig10/weight+input/{pname}",
@@ -193,6 +217,7 @@ def run() -> List[Dict]:
         })
 
     # input-sparsity gain across weight ratios (row-wise)
+    jobs = []
     for ratio in (0.5, 0.7, 0.9):
         spec = TABLE_II_PATTERNS(ratio, c_in=16)["row-wise"]
         wl = resnet50(32).set_sparsity(spec)
@@ -200,9 +225,12 @@ def run() -> List[Dict]:
         zr = 0.40 + 0.10 * ratio
         sr = _synthetic_skip(arch.macro.sub_rows, zr)
         skip = {op.name: sr for op in wl.mvm_ops()}
-        dense_m = dense_baseline(arch, resnet50(32), mapping)
-        rep_w = simulate(arch, wl, mapping)
-        rep_wi = simulate(arch, wl, mapping, input_sparsity=skip)
+        jobs.append(ExploreJob.simulate(arch, wl, mapping))
+        jobs.append(ExploreJob.simulate(arch, wl, mapping, input_sparsity=skip))
+        jobs.append(ExploreJob.dense(arch, resnet50(32), mapping))
+    reports = runner.run(jobs)
+    for i, ratio in enumerate((0.5, 0.7, 0.9)):
+        rep_w, rep_wi, dense_m = reports[3 * i:3 * i + 3]
         gain = compare(rep_wi, dense_m)["speedup"] / \
             max(compare(rep_w, dense_m)["speedup"], 1e-9)
         rows.append({
@@ -210,4 +238,16 @@ def run() -> List[Dict]:
             "us_per_call": 0.0,
             "input_gain": round(gain, 3),
         })
+
+    s = runner.stats
+    rows.append({
+        "name": "engine/stats",
+        "us_per_call": 0.0,
+        "requested": s.requested,
+        "unique": s.unique,
+        "cache_hits": s.cache_hits,
+        "evaluated": s.evaluated,
+        "workers": s.workers,
+        "wall_s": round(s.wall_s, 2),
+    })
     return rows

@@ -2,57 +2,65 @@
 
 Sweeps mapping strategy (spatial weight-unroll vs weight duplication) ×
 macro organisation (8×2 / 4×4 / 2×8) × weight rearrangement for a sparse
-ResNet-50 on a 16-macro CIM architecture, and prints the trade-off table
-that backs the paper's Finding 2.
+ResNet-50 on a 16-macro CIM architecture through the
+:mod:`repro.explore` engine, and prints the trade-off table, the
+latency/energy Pareto frontier, and the engine's cache accounting that
+back the paper's Finding 2.
 
-Run:  PYTHONPATH=src python examples/explore_mapping.py [--model resnet50|vgg16]
+Run:  PYTHONPATH=src python examples/explore_mapping.py \
+          [--model resnet50|vgg16] [--workers N]
 """
 import argparse
 
-from repro.core import (default_mapping, dense_baseline, hybrid, compare,
-                        resnet50, simulate, sweep_mappings, usecase_arch,
-                        vgg16)
+from repro.core import hybrid, resnet50, usecase_arch, vgg16
+from repro.explore import SweepRunner, mapping_sweep
 
 
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--model", choices=["resnet50", "vgg16"],
                     default="resnet50")
+    ap.add_argument("--workers", type=int, default=None,
+                    help="worker processes (default: one per CPU)")
     args = ap.parse_args()
     wl_fn = {"resnet50": lambda: resnet50(32),
              "vgg16": lambda: vgg16(32)}[args.model]
     spec = hybrid(2, 16, 0.8)
+    runner = SweepRunner(workers=args.workers)
 
-    rows = sweep_mappings(lambda org: usecase_arch(16, org), wl_fn, spec,
-                          orgs=((8, 2), (4, 4), (2, 8)),
-                          strategies=("spatial", "duplicate"))
+    # one grid: strategy × organisation × rearrangement
+    result = mapping_sweep(
+        lambda org: usecase_arch(16, org), wl_fn, spec,
+        orgs=((8, 2), (4, 4), (2, 8)),
+        strategies=("spatial", "duplicate"),
+        rearrange=(None, "slice"),
+        runner=runner)
+
     print(f"{args.model} × IntraBlock(2,1)+FullBlock(2,16) @ 80% "
           f"on 16-macro CIM\n")
-    hdr = f"{'org':>5} {'strategy':>10} {'latency ms':>11} " \
+    hdr = f"{'org':>5} {'strategy':>10} {'rearrange':>10} {'latency ms':>11} " \
           f"{'energy uJ':>10} {'util':>6} {'speedup':>8}"
     print(hdr)
     print("-" * len(hdr))
-    for r in rows:
-        print(f"{r['org']:>5} {r['mapping']:>10} {r['latency_ms']:>11.4f} "
-              f"{r['energy_uj']:>10.2f} {r['utilization']:>6.1%} "
-              f"{r['speedup']:>8.2f}")
+    for r in result.rows:
+        print(f"{r['org']:>5} {r['mapping']:>10} {r['rearrange']:>10} "
+              f"{r['latency_ms']:>11.4f} {r['energy_uj']:>10.2f} "
+              f"{r['utilization']:>6.1%} {r['speedup']:>8.2f}")
 
-    best = min(rows, key=lambda r: r["latency_ms"])
+    best = result.top_k("latency_ms", 1)[0]
     print(f"\nbest: {best['mapping']} @ {best['org']} "
-          f"({best['latency_ms']:.4f} ms)")
+          f"(rearrange={best['rearrange']}, {best['latency_ms']:.4f} ms)")
 
-    # rearrangement study at the balanced 4×4 organisation
-    print("\nweight rearrangement (4×4, duplicate):")
-    arch = usecase_arch(16, (4, 4))
-    dense = dense_baseline(arch, wl_fn(), default_mapping(arch, "duplicate"))
-    for rr, label in ((None, "as-compressed"), ("slice", "rearranged")):
-        mapping = default_mapping(arch, "duplicate", rearrange=rr,
-                                  slice_size=arch.macro.sub_rows if rr else 0)
-        rep = simulate(arch, wl_fn().set_sparsity(spec), mapping)
-        c = compare(rep, dense)
-        print(f"  {label:14s} util {rep.utilization:.1%}  "
-              f"energy {rep.total_energy_uj:.2f} uJ  "
-              f"speedup {c['speedup']:.2f}x")
+    front = result.pareto((("latency_ms", "min"), ("energy_uj", "min")))
+    print("\nlatency/energy Pareto frontier:")
+    for r in front:
+        print(f"  {r['mapping']:>10} @ {r['org']} rearrange={r['rearrange']:<6} "
+              f"{r['latency_ms']:.4f} ms  {r['energy_uj']:.2f} uJ")
+
+    s = result.stats
+    print(f"\nengine: {s.requested} jobs, {s.unique} unique, "
+          f"{s.cache_hits} cache hits, {s.evaluated} evaluated "
+          f"on {s.workers} worker(s) in {s.wall_s:.2f}s")
 
 
 if __name__ == "__main__":

@@ -10,6 +10,8 @@ Public API:
 * Cost model (§V):                     :mod:`repro.core.costmodel`
 * Input-sparsity profiling (§IV-B):    :mod:`repro.core.input_sparsity`
 * Exploration sweeps (§VII):           :mod:`repro.core.explorer`
+  (compatibility wrappers; the parallel engine with result caching and
+  Pareto post-processing lives in :mod:`repro.explore`)
 """
 from .flexblock import (FlexBlockSpec, FullBlock, IntraBlock, TABLE_II_PATTERNS,
                         channel_wise, column_block, column_wise, dense_spec,
@@ -17,16 +19,35 @@ from .flexblock import (FlexBlockSpec, FullBlock, IntraBlock, TABLE_II_PATTERNS,
 from .hardware import CIMArch, ComputeUnit, MacroSpec, MemoryUnit
 from .mapping import (MappingSpec, ReshapeSpec, default_mapping,
                       duplicate_mapping, reshape_and_compress, spatial_mapping)
-from .costmodel import compare, dense_baseline, simulate
-from .pruning import (block_losses, flexblock_mask, fullblock_mask,
-                      intrablock_mask, prune_matrix)
+from .costmodel import compare, dense_baseline, dense_twin, simulate
 from .report import CostReport, OpCost
 from .workload import (MODEL_BUILDERS, OpNode, Workload, lm_workload,
                        mobilenet_v2, resnet18, resnet50, vgg16)
 from .presets import mars_arch, sdp_arch, usecase_arch, PRESET_ARCHS
-from .input_sparsity import (analytic_skip_ratio, profile_activations,
-                             quantize_int8, skippable_bit_ratio)
 from .explorer import sweep_mappings, sweep_orgs, sweep_sparsity
+
+# The pruning workflow (§IV-D) and input-sparsity profiling (§IV-B) run
+# on jax; the cost model + exploration plane above is numpy-only.  Keep
+# the package importable without jax and fail with a clear message only
+# when a jax-backed function is actually called.
+try:
+    from .pruning import (block_losses, flexblock_mask, fullblock_mask,
+                          intrablock_mask, prune_matrix)
+    from .input_sparsity import (analytic_skip_ratio, profile_activations,
+                                 quantize_int8, skippable_bit_ratio)
+except ModuleNotFoundError as _e:   # pragma: no cover - jax-free installs
+    if _e.name not in ("jax", "jaxlib"):
+        raise
+
+    def _needs_jax(*_a, **_k):
+        raise ImportError(
+            "the pruning workflow / input-sparsity profiling needs jax: "
+            "install the [jax] extra (pip install -e '.[jax]')")
+
+    block_losses = flexblock_mask = fullblock_mask = _needs_jax
+    intrablock_mask = prune_matrix = _needs_jax
+    analytic_skip_ratio = profile_activations = _needs_jax
+    quantize_int8 = skippable_bit_ratio = _needs_jax
 
 __all__ = [
     # flexblock
@@ -40,7 +61,8 @@ __all__ = [
     "MappingSpec", "ReshapeSpec", "default_mapping", "duplicate_mapping",
     "reshape_and_compress", "spatial_mapping",
     # cost model
-    "compare", "dense_baseline", "simulate", "CostReport", "OpCost",
+    "compare", "dense_baseline", "dense_twin", "simulate", "CostReport",
+    "OpCost",
     # pruning
     "block_losses", "flexblock_mask", "fullblock_mask", "intrablock_mask",
     "prune_matrix",

@@ -34,7 +34,7 @@ from .mapping import MappingSpec, reshape_and_compress
 from .report import CostReport, OpCost
 from .workload import OpNode, Workload
 
-__all__ = ["simulate", "dense_baseline", "compare"]
+__all__ = ["simulate", "dense_baseline", "dense_twin", "compare"]
 
 
 @dataclasses.dataclass
@@ -359,10 +359,13 @@ def simulate(
     )
 
 
-def dense_baseline(arch: CIMArch, workload: Workload,
-                   mapping: MappingSpec) -> CostReport:
-    """The paper's dense baseline: same architecture configuration, no
-    sparsity-support hardware engaged, dense weights."""
+def dense_twin(arch: CIMArch, workload: Workload) -> tuple:
+    """The dense counterpart of a (arch, workload) pair: sparsity
+    stripped from every op, sparsity-support hardware disabled.
+
+    Shared by :func:`dense_baseline` and the exploration engine's
+    baseline jobs (``repro.explore.job.ExploreJob.dense``) so the two
+    can never diverge."""
     dense_wl = Workload(workload.name + "-dense")
     for n in workload.nodes.values():
         dn = copy.copy(n)
@@ -370,6 +373,14 @@ def dense_baseline(arch: CIMArch, workload: Workload,
         dense_wl.nodes[dn.name] = dn
     dense_arch = arch.replace(weight_sparsity_support=False,
                               input_sparsity_support=False)
+    return dense_arch, dense_wl
+
+
+def dense_baseline(arch: CIMArch, workload: Workload,
+                   mapping: MappingSpec) -> CostReport:
+    """The paper's dense baseline: same architecture configuration, no
+    sparsity-support hardware engaged, dense weights."""
+    dense_arch, dense_wl = dense_twin(arch, workload)
     return simulate(dense_arch, dense_wl, mapping)
 
 

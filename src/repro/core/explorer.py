@@ -1,38 +1,26 @@
 """Design-space exploration sweeps (paper §VII use-cases).
 
-Thin orchestration over the simulator: evaluate grids of
-(sparsity pattern × ratio × macro organisation × mapping strategy) and
-tabulate speedup / energy saving / utilisation against the dense
-baseline.  Rows are plain dicts so benchmarks can CSV them directly.
+Compatibility layer: the sweep logic lives in :mod:`repro.explore`, a
+job-based engine with content-addressed result caching and process
+fan-out.  These wrappers keep the original signatures and row schema;
+they run the engine sequentially (``workers=1``) so callers that never
+opted into parallelism see identical behaviour, while still getting
+baseline deduplication for free.
+
+Pass ``workers``/``runner`` to fan a sweep out or to share a result
+cache across sweeps — or use :mod:`repro.explore` directly for Pareto
+frontiers, top-k tables, and CSV/JSON export.
 """
 from __future__ import annotations
 
-import itertools
-from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
-from .costmodel import compare, dense_baseline, simulate
 from .flexblock import FlexBlockSpec
 from .hardware import CIMArch
-from .mapping import MappingSpec, default_mapping
+from .mapping import MappingSpec
 from .workload import Workload
 
 __all__ = ["sweep_sparsity", "sweep_mappings", "sweep_orgs"]
-
-
-def _row(arch, wl, spec_name, ratio, mapping, rep, cmp) -> Dict:
-    return {
-        "arch": arch.name,
-        "workload": wl.name,
-        "pattern": spec_name,
-        "ratio": ratio,
-        "mapping": mapping,
-        "latency_ms": rep.latency_ms,
-        "energy_uj": rep.total_energy_uj,
-        "utilization": rep.utilization,
-        "speedup": cmp["speedup"],
-        "energy_saving": cmp["energy_saving"],
-        "index_kib": rep.index_storage_bits / 8 / 1024,
-    }
 
 
 def sweep_sparsity(
@@ -44,20 +32,17 @@ def sweep_sparsity(
     mapping: Optional[MappingSpec] = None,
     pattern_factory: Optional[Callable[[float], Dict[str, FlexBlockSpec]]] = None,
     input_sparsity: Optional[Dict[str, float]] = None,
+    workers: Optional[int] = 1,
+    runner=None,
 ) -> List[Dict]:
     """§VII-B: sparsity pattern × ratio grid on one architecture."""
-    mapping = mapping or default_mapping(arch)
-    base_wl = workload_fn()
-    dense = dense_baseline(arch, base_wl, mapping)
-    rows: List[Dict] = []
-    for ratio in ratios:
-        pats = pattern_factory(ratio) if pattern_factory else patterns
-        for name, spec in pats.items():
-            wl = workload_fn().set_sparsity(spec)
-            rep = simulate(arch, wl, mapping, input_sparsity=input_sparsity)
-            rows.append(_row(arch, wl, name, ratio, mapping.strategy,
-                             rep, compare(rep, dense)))
-    return rows
+    from ..explore import sparsity_sweep
+
+    return sparsity_sweep(
+        arch, workload_fn, patterns, ratios=ratios, mapping=mapping,
+        pattern_factory=pattern_factory, input_sparsity=input_sparsity,
+        workers=workers, runner=runner,
+    ).rows
 
 
 def sweep_mappings(
@@ -68,20 +53,16 @@ def sweep_mappings(
     orgs: Sequence[Tuple[int, int]] = ((8, 2), (4, 4), (2, 8)),
     strategies: Sequence[str] = ("spatial", "duplicate"),
     rearrange: Sequence[Optional[str]] = (None,),
+    workers: Optional[int] = 1,
+    runner=None,
 ) -> List[Dict]:
     """§VII-C: mapping strategy × macro organisation (× rearrangement)."""
-    rows: List[Dict] = []
-    for org, strat, rr in itertools.product(orgs, strategies, rearrange):
-        arch = arch_fn(org)
-        mapping = default_mapping(arch, strat, rearrange=rr)
-        wl = workload_fn().set_sparsity(spec)
-        dense = dense_baseline(arch, wl, mapping)
-        rep = simulate(arch, wl, mapping)
-        row = _row(arch, wl, spec.name, None, strat, rep, compare(rep, dense))
-        row["org"] = f"{org[0]}x{org[1]}"
-        row["rearrange"] = rr or "none"
-        rows.append(row)
-    return rows
+    from ..explore import mapping_sweep
+
+    return mapping_sweep(
+        arch_fn, workload_fn, spec, orgs=orgs, strategies=strategies,
+        rearrange=rearrange, workers=workers, runner=runner,
+    ).rows
 
 
 def sweep_orgs(
@@ -90,6 +71,7 @@ def sweep_orgs(
     spec: FlexBlockSpec,
     orgs: Sequence[Tuple[int, int]],
     strategy: str = "spatial",
+    **kw,
 ) -> List[Dict]:
     return sweep_mappings(arch_fn, workload_fn, spec, orgs=orgs,
-                          strategies=(strategy,))
+                          strategies=(strategy,), **kw)

@@ -17,6 +17,7 @@ Two halves:
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import math
 from typing import List, Optional, Tuple
 
@@ -129,7 +130,12 @@ def _block_keep_grid(op: OpNode, spec: FlexBlockSpec) -> Optional[np.ndarray]:
     f = full.bind(shape)
     gm, gn = f.grid(shape)
     n_keep = f.nonzero_blocks(shape)
-    rng = np.random.default_rng(abs(hash((op.name, f.m, f.n, round(f.ratio, 6)))) % (2**32))
+    # content-stable seed: Python's hash() is salted per process, which
+    # would make parallel sweep workers disagree with sequential runs
+    seed_src = f"{op.name}|{f.m}|{f.n}|{round(f.ratio, 6)}"
+    seed = int.from_bytes(
+        hashlib.blake2b(seed_src.encode(), digest_size=4).digest(), "little")
+    rng = np.random.default_rng(seed)
     keep = np.zeros(gm * gn, dtype=bool)
     keep[rng.permutation(gm * gn)[:n_keep]] = True
     return keep.reshape(gm, gn)

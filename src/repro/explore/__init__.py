@@ -1,0 +1,32 @@
+"""CIMinus design-space exploration engine (paper §VII use-cases).
+
+A job-based sweep runner over the cost model in :mod:`repro.core`:
+
+* :mod:`repro.explore.job`    — hashable, content-addressed ``ExploreJob``
+* :mod:`repro.explore.cache`  — memory + on-disk result memoisation
+* :mod:`repro.explore.runner` — dedup / cache / process fan-out with
+  deterministic row ordering
+* :mod:`repro.explore.sweeps` — the paper's §VII-B/§VII-C grids as jobs
+* :mod:`repro.explore.pareto` — Pareto frontiers and top-k tables
+
+CLI: ``python -m repro.explore <sweep> [options]`` runs a named sweep
+and emits CSV/JSON (see ``--help``).
+
+The legacy ``repro.core.explorer`` sweeps remain as thin compatibility
+wrappers over this engine.
+"""
+from .cache import CacheStats, ResultCache
+from .job import CACHE_SCHEMA, ExploreJob, canonical, content_key
+from .pareto import DEFAULT_OBJECTIVES, pareto_front, top_k
+from .runner import RunStats, SweepRunner, evaluate_job
+from .sweeps import (GridPoint, SweepResult, mapping_sweep, org_sweep,
+                     run_grid, sparsity_sweep)
+
+__all__ = [
+    "CACHE_SCHEMA", "ExploreJob", "canonical", "content_key",
+    "CacheStats", "ResultCache",
+    "RunStats", "SweepRunner", "evaluate_job",
+    "GridPoint", "SweepResult", "run_grid",
+    "sparsity_sweep", "mapping_sweep", "org_sweep",
+    "DEFAULT_OBJECTIVES", "pareto_front", "top_k",
+]

@@ -1,0 +1,189 @@
+"""``python -m repro.explore`` — run a named sweep from the command line.
+
+Named sweeps:
+
+* ``sparsity`` — §VII-B: Table II patterns × sparsity ratios on one
+  architecture (default: the 4-macro use-case arch, ResNet-50).
+* ``mapping``  — §VII-C: mapping strategy × macro organisation
+  (× rearrangement) on the 16-macro use-case arch.
+* ``lm``       — lower one of the repo's LM configs to an MVM DAG and
+  sweep Table II patterns × ratios over it.
+
+Examples::
+
+    python -m repro.explore sparsity --model resnet50 --ratios 0.7,0.8,0.9 \
+        --workers 4 --cache-dir .cim_cache --csv sparsity.csv --pareto
+    python -m repro.explore mapping --model vgg16 --rearrange none,slice
+    python -m repro.explore lm --config llama3-8b --seq-len 64 --top-k 3
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import Dict, List, Optional
+
+from ..core import (TABLE_II_PATTERNS, MODEL_BUILDERS, hybrid, lm_workload,
+                    usecase_arch)
+from ..core.presets import PRESET_ARCHS
+from .cache import ResultCache
+from .pareto import DEFAULT_OBJECTIVES
+from .runner import SweepRunner
+from .sweeps import SweepResult, mapping_sweep, sparsity_sweep
+
+_ROW_COLS = ("pattern", "ratio", "mapping", "org", "rearrange",
+             "latency_ms", "energy_uj", "utilization", "speedup",
+             "energy_saving", "index_kib")
+
+
+def _print_rows(rows: List[Dict], title: str) -> None:
+    print(f"\n== {title} ({len(rows)} rows) ==")
+    cols = [c for c in _ROW_COLS if any(c in r for r in rows)]
+    print("  " + "  ".join(f"{c:>12}" for c in cols))
+    for r in rows:
+        cells = []
+        for c in cols:
+            v = r.get(c)
+            if isinstance(v, float):
+                cells.append(f"{v:>12.4f}")
+            else:
+                cells.append(f"{str(v):>12}")
+        print("  " + "  ".join(cells))
+
+
+def _finish(result: SweepResult, args: argparse.Namespace) -> int:
+    _print_rows(result.rows, f"{args.sweep} sweep")
+    if args.pareto:
+        objs = [o for o in DEFAULT_OBJECTIVES
+                if any(o[0] in r for r in result.rows)]
+        _print_rows(result.pareto(objs),
+                    "Pareto frontier (" + " / ".join(c for c, _ in objs) + ")")
+    if args.top_k:
+        _print_rows(result.top_k(args.metric, args.top_k),
+                    f"top-{args.top_k} by {args.metric}")
+    s = result.stats
+    print(f"\nengine: {s.requested} jobs requested, {s.unique} unique, "
+          f"{s.cache_hits} cache hits ({s.memory_hits} mem / {s.disk_hits} "
+          f"disk), {s.evaluated} evaluated on {s.workers} worker(s) "
+          f"in {s.wall_s:.2f}s")
+    status = 0
+    for path, write, what in ((args.csv, result.to_csv,
+                               f"{len(result.rows)} rows"),
+                              (args.json, result.to_json, "rows + stats")):
+        if not path:
+            continue
+        try:
+            write(path)
+            print(f"wrote {what} to {path}")
+        except OSError as e:
+            print(f"error: could not write {path}: {e}", file=sys.stderr)
+            status = 1
+    return status
+
+
+def _parse_floats(ap: argparse.ArgumentParser, text: str) -> List[float]:
+    try:
+        vals = [float(t) for t in text.split(",") if t]
+    except ValueError:
+        ap.error(f"--ratios expects comma-separated numbers, got {text!r}")
+    if not vals:
+        ap.error("--ratios must name at least one ratio")
+    bad = [v for v in vals if not 0.0 < v < 1.0]
+    if bad:
+        ap.error(f"sparsity ratios must be in (0, 1), got {bad}")
+    return vals
+
+
+def _parse_orgs(ap: argparse.ArgumentParser, text: str) -> List[tuple]:
+    orgs = []
+    for t in text.split(","):
+        if not t:
+            continue
+        try:
+            r, c = t.lower().split("x")
+            orgs.append((int(r), int(c)))
+        except ValueError:
+            ap.error(f"--orgs expects ROWSxCOLS entries like 4x4, got {t!r}")
+    if not orgs:
+        ap.error("--orgs must name at least one organisation")
+    return orgs
+
+
+def _runner(args: argparse.Namespace) -> SweepRunner:
+    cache = ResultCache(args.cache_dir) if args.cache_dir else None
+    return SweepRunner(workers=args.workers, cache=cache)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.explore",
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("sweep", choices=("sparsity", "mapping", "lm"))
+    ap.add_argument("--model", choices=sorted(MODEL_BUILDERS),
+                    default="resnet50", help="workload model (CNN sweeps)")
+    ap.add_argument("--img", type=int, default=32,
+                    help="input resolution for CNN models")
+    ap.add_argument("--arch", choices=sorted(PRESET_ARCHS), default=None,
+                    help="preset architecture (default per sweep)")
+    ap.add_argument("--ratios", default="0.5,0.7,0.8,0.9",
+                    help="comma-separated sparsity ratios")
+    ap.add_argument("--spec-ratio", type=float, default=0.8,
+                    help="overall ratio of the hybrid spec (mapping sweep)")
+    ap.add_argument("--orgs", default="8x2,4x4,2x8",
+                    help="macro organisations, e.g. 8x2,4x4")
+    ap.add_argument("--strategies", default="spatial,duplicate")
+    ap.add_argument("--rearrange", default="none",
+                    help="comma list from {none,pad,slice}")
+    ap.add_argument("--config", default="llama3-8b",
+                    help="LM config name (lm sweep)")
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--workers", type=int, default=None,
+                    help="worker processes (default: one per CPU; 1 = serial)")
+    ap.add_argument("--cache-dir", default=None,
+                    help="on-disk result cache directory")
+    ap.add_argument("--csv", default=None)
+    ap.add_argument("--json", default=None)
+    ap.add_argument("--pareto", action="store_true",
+                    help="print the Pareto frontier")
+    ap.add_argument("--top-k", type=int, default=0, metavar="K",
+                    help="print the top-K rows by --metric")
+    ap.add_argument("--metric", default="latency_ms")
+    args = ap.parse_args(argv)
+
+    runner = _runner(args)
+    ratios = _parse_floats(ap, args.ratios)
+
+    if args.sweep == "sparsity":
+        arch = PRESET_ARCHS[args.arch]() if args.arch else usecase_arch(4)
+        wl_fn = lambda: MODEL_BUILDERS[args.model](args.img)  # noqa: E731
+        result = sparsity_sweep(
+            arch, wl_fn, {}, ratios=ratios, runner=runner,
+            pattern_factory=lambda r: TABLE_II_PATTERNS(r, c_in=16))
+    elif args.sweep == "mapping":
+        wl_fn = lambda: MODEL_BUILDERS[args.model](args.img)  # noqa: E731
+        rearrange = [None if t == "none" else t
+                     for t in args.rearrange.split(",") if t]
+        if args.arch:
+            base = PRESET_ARCHS[args.arch]
+            arch_fn = lambda org: base().with_org(org)  # noqa: E731
+        else:
+            arch_fn = lambda org: usecase_arch(org[0] * org[1], org)  # noqa: E731
+        result = mapping_sweep(
+            arch_fn, wl_fn,
+            hybrid(2, 16, args.spec_ratio),
+            orgs=_parse_orgs(ap, args.orgs),
+            strategies=tuple(t for t in args.strategies.split(",") if t),
+            rearrange=rearrange, runner=runner)
+    else:  # lm
+        from ..configs import get_config
+        cfg = get_config(args.config)
+        arch = PRESET_ARCHS[args.arch]() if args.arch else usecase_arch(16)
+        wl_fn = lambda: lm_workload(cfg, seq_len=args.seq_len)  # noqa: E731
+        result = sparsity_sweep(
+            arch, wl_fn, {}, ratios=ratios, runner=runner,
+            pattern_factory=lambda r: TABLE_II_PATTERNS(r, c_in=16))
+    return _finish(result, args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

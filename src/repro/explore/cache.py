@@ -1,0 +1,109 @@
+"""Content-addressed result cache for exploration jobs.
+
+Two tiers share one key space (:attr:`ExploreJob.key`):
+
+* an in-memory dict — hit for free within a runner's lifetime, shared
+  across every sweep that reuses the runner;
+* an optional on-disk directory — one pickle per key, so repeated CLI
+  invocations and benchmark re-runs skip already-costed grid points.
+
+Writes are atomic (tmp file + ``os.replace``) so a crashed or parallel
+writer never leaves a torn entry, and a corrupt/unreadable entry is
+treated as a miss rather than an error.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import pickle
+import tempfile
+import warnings
+from pathlib import Path
+from typing import Dict, Optional, Union
+
+from ..core.report import CostReport
+
+__all__ = ["ResultCache", "CacheStats"]
+
+
+@dataclasses.dataclass
+class CacheStats:
+    """Hit/miss accounting, split by tier."""
+
+    memory_hits: int = 0
+    disk_hits: int = 0
+    misses: int = 0
+
+    @property
+    def hits(self) -> int:
+        return self.memory_hits + self.disk_hits
+
+    @property
+    def lookups(self) -> int:
+        return self.hits + self.misses
+
+    def as_dict(self) -> Dict[str, int]:
+        return {"memory_hits": self.memory_hits, "disk_hits": self.disk_hits,
+                "misses": self.misses, "hits": self.hits,
+                "lookups": self.lookups}
+
+
+class ResultCache:
+    """Memoises ``job.key -> CostReport``."""
+
+    def __init__(self, path: Optional[Union[str, Path]] = None):
+        self._mem: Dict[str, CostReport] = {}
+        self._dir: Optional[Path] = None
+        self.stats = CacheStats()
+        if path is not None:
+            self._dir = Path(path)
+            self._dir.mkdir(parents=True, exist_ok=True)
+
+    def __len__(self) -> int:
+        return len(self._mem)
+
+    def _disk_path(self, key: str) -> Optional[Path]:
+        return self._dir / f"{key}.pkl" if self._dir else None
+
+    def get(self, key: str) -> Optional[CostReport]:
+        rep = self._mem.get(key)
+        if rep is not None:
+            self.stats.memory_hits += 1
+            return rep
+        p = self._disk_path(key)
+        if p is not None and p.exists():
+            try:
+                with open(p, "rb") as f:
+                    rep = pickle.load(f)
+            except Exception:
+                rep = None            # torn/stale entry: fall through to miss
+            if isinstance(rep, CostReport):
+                self._mem[key] = rep
+                self.stats.disk_hits += 1
+                return rep
+        self.stats.misses += 1
+        return None
+
+    def put(self, key: str, report: CostReport) -> None:
+        self._mem[key] = report
+        p = self._disk_path(key)
+        if p is None:
+            return
+        tmp = None
+        try:
+            fd, tmp = tempfile.mkstemp(dir=self._dir, suffix=".tmp")
+            with os.fdopen(fd, "wb") as f:
+                pickle.dump(report, f, protocol=pickle.HIGHEST_PROTOCOL)
+            os.replace(tmp, p)
+        except OSError as e:
+            # mirror the read path's soft-miss contract: a full or
+            # read-only cache volume must not abort a finished sweep —
+            # degrade to memory-only and keep going
+            if tmp is not None:
+                try:
+                    os.unlink(tmp)
+                except OSError:
+                    pass
+            warnings.warn(f"result cache disk tier disabled ({e})",
+                          RuntimeWarning, stacklevel=2)
+            self._dir = None

@@ -1,0 +1,147 @@
+"""Exploration jobs: hashable, content-addressed simulation requests.
+
+A sweep is a list of :class:`ExploreJob` — pure-data descriptions of one
+simulator evaluation (a sparse :func:`~repro.core.costmodel.simulate` or
+a dense baseline).  Jobs carry fully-materialised inputs (arch, workload
+with sparsity already bound, mapping), so they pickle cleanly across
+process boundaries and two jobs with identical content produce identical
+cache keys no matter which process, run, or host built them.
+
+The key is a digest over a *canonical form* of the job: dataclasses are
+flattened to ``(class-name, sorted fields)``, dicts are sorted, numpy
+arrays are serialised with their dtype and shape.  ``CACHE_SCHEMA`` salts
+the digest so stale on-disk results are invalidated whenever the cost
+model changes shape.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from ..core.hardware import CIMArch
+from ..core.mapping import MappingSpec
+from ..core.workload import Workload
+
+__all__ = ["ExploreJob", "canonical", "content_key", "CACHE_SCHEMA"]
+
+# Bump when the cost model or job serialisation changes incompatibly:
+# on-disk caches keyed under an older schema are simply never hit again.
+CACHE_SCHEMA = 1
+
+
+def canonical(obj) -> object:
+    """Reduce ``obj`` to a JSON-serialisable canonical form.
+
+    Deterministic across processes and runs (no ``id``/``hash`` leakage):
+    dataclasses become ``[class-name, [(field, value), ...]]`` with fields
+    sorted by name, dicts are sorted by stringified key, and numpy arrays
+    carry dtype + shape + values.
+    """
+    if obj is None or isinstance(obj, (bool, int, str)):
+        return obj
+    if isinstance(obj, float):
+        # repr round-trips exactly and avoids JSON float surprises
+        return ["f", repr(obj)]
+    if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        fields = sorted(
+            (f.name, canonical(getattr(obj, f.name)))
+            for f in dataclasses.fields(obj)
+        )
+        return [type(obj).__name__, fields]
+    if isinstance(obj, np.ndarray):
+        # digest raw bytes: mask-sized arrays would be prohibitively slow
+        # to serialise element-wise, and keying only needs content equality
+        arr = np.ascontiguousarray(obj)
+        return ["ndarray", str(arr.dtype), list(arr.shape),
+                hashlib.sha256(arr.tobytes()).hexdigest()]
+    if isinstance(obj, np.generic):
+        return canonical(obj.item())
+    if isinstance(obj, (list, tuple)):
+        return [canonical(v) for v in obj]
+    if isinstance(obj, dict):
+        return ["dict", sorted((str(k), canonical(v)) for k, v in obj.items())]
+    if isinstance(obj, Workload):
+        return ["Workload", obj.name,
+                [(name, canonical(node)) for name, node in obj.nodes.items()]]
+    raise TypeError(f"cannot canonicalise {type(obj).__name__!r} for job keying")
+
+
+def content_key(obj) -> str:
+    """Stable hex digest of ``obj``'s canonical form."""
+    payload = json.dumps(["v", CACHE_SCHEMA, canonical(obj)],
+                         separators=(",", ":"), sort_keys=True)
+    return hashlib.sha256(payload.encode()).hexdigest()
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class ExploreJob:
+    """One simulator evaluation, as pure data.
+
+    ``kind`` selects the evaluation: ``"simulate"`` runs the sparse cost
+    model as configured; ``"dense"`` disables the sparsity-support
+    hardware and expects ``workload`` to already be the stripped dense
+    twin (see :func:`dense_job`), so that every grid point sharing a
+    baseline maps onto the *same* cache key.
+
+    ``input_sparsity`` is stored as a sorted tuple of pairs (hashable);
+    ``masks`` maps op name → FullBlock keep-grid from the pruning
+    workflow and participates in the key via array content.
+    """
+
+    kind: str                                   # 'simulate' | 'dense'
+    arch: CIMArch
+    workload: Workload
+    mapping: MappingSpec
+    input_sparsity: Optional[Tuple[Tuple[str, float], ...]] = None
+    masks: Optional[Tuple[Tuple[str, np.ndarray], ...]] = None
+
+    def __post_init__(self):
+        if self.kind not in ("simulate", "dense"):
+            raise ValueError(f"unknown job kind {self.kind!r}")
+
+    @property
+    def key(self) -> str:
+        """Content-addressed cache key (memoised per instance)."""
+        k = self.__dict__.get("_key")
+        if k is None:
+            k = content_key(self)
+            object.__setattr__(self, "_key", k)
+        return k
+
+    def __hash__(self) -> int:
+        return hash(self.key)
+
+    def __eq__(self, other) -> bool:
+        return isinstance(other, ExploreJob) and self.key == other.key
+
+    # -- convenience constructors -------------------------------------------
+    @staticmethod
+    def simulate(arch: CIMArch, workload: Workload, mapping: MappingSpec, *,
+                 input_sparsity: Optional[Dict[str, float]] = None,
+                 masks: Optional[Dict[str, np.ndarray]] = None) -> "ExploreJob":
+        return ExploreJob(
+            kind="simulate", arch=arch, workload=workload, mapping=mapping,
+            input_sparsity=(tuple(sorted(input_sparsity.items()))
+                            if input_sparsity else None),
+            masks=tuple(sorted(masks.items())) if masks else None,
+        )
+
+    @staticmethod
+    def dense(arch: CIMArch, workload: Workload,
+              mapping: MappingSpec) -> "ExploreJob":
+        """Dense-baseline job: sparsity stripped, support hardware off.
+
+        Stripping happens *here* (via :func:`~repro.core.costmodel.dense_twin`,
+        the same helper ``dense_baseline`` uses) so that e.g. every ratio
+        of a pattern sweep keys its baseline identically and pays for it
+        once.
+        """
+        from ..core.costmodel import dense_twin
+
+        dense_arch, dense_wl = dense_twin(arch, workload)
+        return ExploreJob(kind="dense", arch=dense_arch, workload=dense_wl,
+                          mapping=mapping)

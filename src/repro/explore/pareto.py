@@ -1,0 +1,65 @@
+"""Post-processing for sweep rows: Pareto frontiers and top-k tables.
+
+Rows are the plain dicts the engine emits (CSV-ready).  The frontier is
+computed over any subset of numeric columns; by default the three axes
+the paper's exploration use-cases trade off — latency, energy, and index
+storage (§VII-B/C).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence, Tuple
+
+__all__ = ["pareto_front", "top_k", "DEFAULT_OBJECTIVES"]
+
+# (column, direction): direction 'min' or 'max'
+DEFAULT_OBJECTIVES: Tuple[Tuple[str, str], ...] = (
+    ("latency_ms", "min"),
+    ("energy_uj", "min"),
+    ("index_kib", "min"),
+)
+
+
+def _vector(row: Dict, objectives: Sequence[Tuple[str, str]]) -> List[float]:
+    """Objective vector in canonical minimisation form."""
+    v = []
+    for col, direction in objectives:
+        x = float(row[col])
+        v.append(x if direction == "min" else -x)
+    return v
+
+
+def _dominates(a: List[float], b: List[float]) -> bool:
+    """True iff ``a`` is no worse than ``b`` everywhere and better somewhere."""
+    return all(x <= y for x, y in zip(a, b)) and any(x < y for x, y in zip(a, b))
+
+
+def pareto_front(
+    rows: Sequence[Dict],
+    objectives: Sequence[Tuple[str, str]] = DEFAULT_OBJECTIVES,
+) -> List[Dict]:
+    """Non-dominated subset of ``rows``, preserving input order.
+
+    Rows missing an objective column are excluded from the frontier
+    (e.g. derived "finding" rows mixed into benchmark output).  Duplicate
+    objective vectors all survive (none strictly dominates the other).
+    """
+    scored = [(i, _vector(r, objectives)) for i, r in enumerate(rows)
+              if all(c in r and r[c] is not None for c, _ in objectives)]
+    front = []
+    for i, vi in scored:
+        if not any(_dominates(vj, vi) for j, vj in scored if j != i):
+            front.append(rows[i])
+    return front
+
+
+def top_k(
+    rows: Sequence[Dict],
+    metric: str,
+    k: int = 5,
+    *,
+    direction: str = "min",
+) -> List[Dict]:
+    """The ``k`` best rows by one metric ('min' = lower is better)."""
+    usable = [r for r in rows if metric in r and r[metric] is not None]
+    return sorted(usable, key=lambda r: float(r[metric]),
+                  reverse=(direction == "max"))[:k]

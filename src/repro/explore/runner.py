@@ -1,0 +1,172 @@
+"""Job runner: dedup → cache lookup → (parallel) evaluate → ordered rows.
+
+The runner is where the sweep engine earns its keep:
+
+* **Dedup** — jobs are content-addressed, so a grid whose points share a
+  dense baseline (or repeat a configuration) evaluates each distinct job
+  exactly once per process pool, however many rows request it.
+* **Memoisation** — a :class:`~repro.explore.cache.ResultCache` serves
+  repeats across sweeps (in memory) and across runs (on disk).
+* **Fan-out** — remaining jobs are shipped to worker processes via
+  ``concurrent.futures.ProcessPoolExecutor``.  Results are keyed, not
+  positional, so completion order never affects output order: callers
+  always get reports in the order they submitted jobs.
+
+Determinism note: the cost model synthesises sparsity masks from
+content-stable seeds (see ``repro.core.mapping._block_keep_grid``), so a
+job evaluates to bit-identical results in any process — parallel runs
+match sequential runs row for row.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from concurrent.futures import ProcessPoolExecutor
+from typing import Dict, List, Optional, Sequence, Union
+
+from ..core.costmodel import simulate
+from ..core.report import CostReport
+from .cache import ResultCache
+from .job import ExploreJob
+
+__all__ = ["evaluate_job", "SweepRunner", "RunStats"]
+
+
+def evaluate_job(job: ExploreJob) -> CostReport:
+    """Evaluate one job.  Module-level so worker processes can import it."""
+    return simulate(
+        job.arch, job.workload, job.mapping,
+        input_sparsity=dict(job.input_sparsity) if job.input_sparsity else None,
+        masks=dict(job.masks) if job.masks else None,
+    )
+
+
+@dataclasses.dataclass
+class RunStats:
+    """Accounting for one :meth:`SweepRunner.run` call."""
+
+    requested: int = 0          # jobs asked for (rows)
+    unique: int = 0             # distinct cache keys among them
+    memory_hits: int = 0
+    disk_hits: int = 0
+    evaluated: int = 0          # simulator calls actually made
+    workers: int = 1
+    wall_s: float = 0.0
+
+    @property
+    def cache_hits(self) -> int:
+        """Evaluations avoided: tiered-cache hits + intra-batch dedup."""
+        return self.requested - self.evaluated
+
+    def as_dict(self) -> Dict[str, Union[int, float]]:
+        d = dataclasses.asdict(self)
+        d["cache_hits"] = self.cache_hits
+        return d
+
+    def merge(self, other: "RunStats") -> "RunStats":
+        return RunStats(
+            requested=self.requested + other.requested,
+            unique=self.unique + other.unique,
+            memory_hits=self.memory_hits + other.memory_hits,
+            disk_hits=self.disk_hits + other.disk_hits,
+            evaluated=self.evaluated + other.evaluated,
+            workers=max(self.workers, other.workers),
+            wall_s=self.wall_s + other.wall_s,
+        )
+
+
+def _resolve_workers(workers: Optional[int]) -> int:
+    if workers is None:
+        return max(1, (os.cpu_count() or 1))
+    return max(1, workers) if workers else 1
+
+
+class SweepRunner:
+    """Evaluates batches of :class:`ExploreJob` with memoisation.
+
+    ``workers``: process count for fan-out.  ``None`` → one per CPU;
+    ``0``/``1`` → sequential in-process (useful for debugging and for
+    row-equivalence tests).
+    ``cache``: a shared :class:`ResultCache`; default is a fresh
+    in-memory cache scoped to this runner.
+    """
+
+    def __init__(self, *, workers: Optional[int] = None,
+                 cache: Optional[ResultCache] = None):
+        self.workers = _resolve_workers(workers)
+        self.cache = cache if cache is not None else ResultCache()
+        self.stats = RunStats()          # cumulative across run() calls
+        self._pool: Optional[ProcessPoolExecutor] = None
+        self._seen_keys: set = set()     # distinct keys across the lifetime
+
+    def _get_pool(self) -> ProcessPoolExecutor:
+        # pool spin-up costs ~0.5s on small containers: amortise it
+        # across every run() call of the runner's lifetime
+        if self._pool is None:
+            self._pool = ProcessPoolExecutor(max_workers=self.workers)
+        return self._pool
+
+    def close(self) -> None:
+        if self._pool is not None:
+            self._pool.shutdown()
+            self._pool = None
+
+    def __enter__(self) -> "SweepRunner":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def __del__(self):
+        try:
+            self.close()
+        except Exception:
+            pass
+
+    def run(self, jobs: Sequence[ExploreJob]) -> List[CostReport]:
+        """Evaluate ``jobs``; returns reports aligned with input order."""
+        t0 = time.perf_counter()
+        stats = RunStats(requested=len(jobs), workers=self.workers)
+
+        # dedup while preserving first-seen order
+        unique: Dict[str, ExploreJob] = {}
+        for job in jobs:
+            unique.setdefault(job.key, job)
+        stats.unique = len(unique)
+
+        mem0, disk0 = self.cache.stats.memory_hits, self.cache.stats.disk_hits
+        results: Dict[str, CostReport] = {}
+        pending: List[ExploreJob] = []
+        for key, job in unique.items():
+            rep = self.cache.get(key)
+            if rep is not None:
+                results[key] = rep
+            else:
+                pending.append(job)
+        stats.memory_hits = self.cache.stats.memory_hits - mem0
+        stats.disk_hits = self.cache.stats.disk_hits - disk0
+
+        if pending:
+            if self.workers > 1 and len(pending) > 1:
+                pool = self._get_pool()
+                chunk = max(1, len(pending) // (self.workers * 4))
+                for job, rep in zip(pending,
+                                    pool.map(evaluate_job, pending,
+                                             chunksize=chunk)):
+                    results[job.key] = rep
+            else:
+                for job in pending:
+                    results[job.key] = evaluate_job(job)
+            for job in pending:
+                self.cache.put(job.key, results[job.key])
+        stats.evaluated = len(pending)
+
+        stats.wall_s = time.perf_counter() - t0
+        self._seen_keys.update(unique)
+        self.stats = self.stats.merge(stats)
+        # cumulative 'unique' means distinct keys over the runner's
+        # lifetime, not the sum of per-batch uniques
+        self.stats.unique = len(self._seen_keys)
+        self.last_stats = stats
+        return [results[job.key] for job in jobs]

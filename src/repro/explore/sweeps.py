@@ -1,0 +1,195 @@
+"""Sweep definitions: enumerate grids as jobs, assemble comparison rows.
+
+Each sweep builds a list of grid points — (sparse job, dense-baseline
+job, row metadata) — hands every job to a :class:`SweepRunner` in one
+batch, and assembles rows in grid-enumeration order.  Because jobs are
+content-addressed, shared baselines (every ratio of a pattern sweep, the
+re-swept best-organisation probe, …) are evaluated once regardless of
+how many rows reference them.
+
+Row schema matches the legacy ``repro.core.explorer`` sweeps field for
+field, so downstream CSV consumers are unaffected.
+"""
+from __future__ import annotations
+
+import csv
+import dataclasses
+import itertools
+import json
+from pathlib import Path
+from typing import (Callable, Dict, List, Optional, Sequence, Tuple, Union)
+
+from ..core.costmodel import compare
+from ..core.flexblock import FlexBlockSpec
+from ..core.hardware import CIMArch
+from ..core.mapping import MappingSpec, default_mapping
+from ..core.report import CostReport
+from ..core.workload import Workload
+from .cache import ResultCache
+from .job import ExploreJob
+from .pareto import DEFAULT_OBJECTIVES, pareto_front, top_k
+from .runner import RunStats, SweepRunner
+
+__all__ = ["GridPoint", "SweepResult", "run_grid",
+           "sparsity_sweep", "mapping_sweep", "org_sweep"]
+
+
+@dataclasses.dataclass(frozen=True)
+class GridPoint:
+    """One sweep row: a sparse evaluation, its baseline, and metadata."""
+
+    job: ExploreJob
+    dense: ExploreJob
+    meta: Tuple[Tuple[str, object], ...] = ()
+
+
+@dataclasses.dataclass
+class SweepResult:
+    """Ordered rows plus run accounting and post-processing views."""
+
+    rows: List[Dict]
+    stats: RunStats
+
+    def pareto(self, objectives: Sequence[Tuple[str, str]] = DEFAULT_OBJECTIVES
+               ) -> List[Dict]:
+        return pareto_front(self.rows, objectives)
+
+    def top_k(self, metric: str, k: int = 5, *, direction: str = "min"
+              ) -> List[Dict]:
+        return top_k(self.rows, metric, k, direction=direction)
+
+    # -- serialisation ------------------------------------------------------
+    def fieldnames(self) -> List[str]:
+        names: List[str] = []
+        for r in self.rows:
+            for k in r:
+                if k not in names:
+                    names.append(k)
+        return names
+
+    def to_csv(self, path: Union[str, Path]) -> None:
+        with open(path, "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=self.fieldnames())
+            w.writeheader()
+            w.writerows(self.rows)
+
+    def to_json(self, path: Optional[Union[str, Path]] = None) -> str:
+        payload = json.dumps({"rows": self.rows,
+                              "stats": self.stats.as_dict()}, indent=2)
+        if path is not None:
+            Path(path).write_text(payload + "\n")
+        return payload
+
+
+def _row(arch: CIMArch, wl: Workload, spec_name: str, ratio, mapping: str,
+         rep: CostReport, cmp: Dict[str, float]) -> Dict:
+    """Legacy explorer row schema (kept byte-compatible)."""
+    return {
+        "arch": arch.name,
+        "workload": wl.name,
+        "pattern": spec_name,
+        "ratio": ratio,
+        "mapping": mapping,
+        "latency_ms": rep.latency_ms,
+        "energy_uj": rep.total_energy_uj,
+        "utilization": rep.utilization,
+        "speedup": cmp["speedup"],
+        "energy_saving": cmp["energy_saving"],
+        "index_kib": rep.index_storage_bits / 8 / 1024,
+    }
+
+
+def run_grid(points: Sequence[GridPoint], *,
+             runner: Optional[SweepRunner] = None,
+             workers: Optional[int] = None,
+             cache: Optional[ResultCache] = None) -> SweepResult:
+    """Evaluate a grid and assemble rows in point order."""
+    runner = runner or SweepRunner(workers=workers, cache=cache)
+    jobs: List[ExploreJob] = []
+    for p in points:
+        jobs.append(p.job)
+        jobs.append(p.dense)
+    reports = runner.run(jobs)
+    rows: List[Dict] = []
+    for i, p in enumerate(points):
+        rep, dense = reports[2 * i], reports[2 * i + 1]
+        meta = dict(p.meta)
+        row = _row(p.job.arch, p.job.workload, meta.pop("pattern", ""),
+                   meta.pop("ratio", None), p.job.mapping.strategy,
+                   rep, compare(rep, dense))
+        row.update(meta)
+        rows.append(row)
+    return SweepResult(rows=rows, stats=runner.last_stats)
+
+
+# ---------------------------------------------------------------------------
+# The paper's two exploration grids (§VII-B, §VII-C).
+# ---------------------------------------------------------------------------
+
+def sparsity_sweep(
+    arch: CIMArch,
+    workload_fn: Callable[[], Workload],
+    patterns: Dict[str, FlexBlockSpec],
+    *,
+    ratios: Sequence[float] = (0.5, 0.6, 0.7, 0.8, 0.9),
+    mapping: Optional[MappingSpec] = None,
+    pattern_factory: Optional[Callable[[float], Dict[str, FlexBlockSpec]]] = None,
+    input_sparsity: Optional[Dict[str, float]] = None,
+    runner: Optional[SweepRunner] = None,
+    workers: Optional[int] = None,
+    cache: Optional[ResultCache] = None,
+) -> SweepResult:
+    """§VII-B: sparsity pattern × ratio grid on one architecture.
+
+    All points share one dense baseline; the engine evaluates it once.
+    """
+    mapping = mapping or default_mapping(arch)
+    dense = ExploreJob.dense(arch, workload_fn(), mapping)
+    points: List[GridPoint] = []
+    for ratio in ratios:
+        pats = pattern_factory(ratio) if pattern_factory else patterns
+        for name, spec in pats.items():
+            wl = workload_fn().set_sparsity(spec)
+            job = ExploreJob.simulate(arch, wl, mapping,
+                                      input_sparsity=input_sparsity)
+            points.append(GridPoint(job, dense,
+                                    meta=(("pattern", name), ("ratio", ratio))))
+    return run_grid(points, runner=runner, workers=workers, cache=cache)
+
+
+def mapping_sweep(
+    arch_fn: Callable[[Tuple[int, int]], CIMArch],
+    workload_fn: Callable[[], Workload],
+    spec: FlexBlockSpec,
+    *,
+    orgs: Sequence[Tuple[int, int]] = ((8, 2), (4, 4), (2, 8)),
+    strategies: Sequence[str] = ("spatial", "duplicate"),
+    rearrange: Sequence[Optional[str]] = (None,),
+    runner: Optional[SweepRunner] = None,
+    workers: Optional[int] = None,
+    cache: Optional[ResultCache] = None,
+) -> SweepResult:
+    """§VII-C: mapping strategy × macro organisation (× rearrangement)."""
+    points: List[GridPoint] = []
+    for org, strat, rr in itertools.product(orgs, strategies, rearrange):
+        arch = arch_fn(org)
+        mapping = default_mapping(arch, strat, rearrange=rr)
+        wl = workload_fn().set_sparsity(spec)
+        job = ExploreJob.simulate(arch, wl, mapping)
+        dense = ExploreJob.dense(arch, wl, mapping)
+        points.append(GridPoint(job, dense, meta=(
+            ("pattern", spec.name), ("ratio", None),
+            ("org", f"{org[0]}x{org[1]}"), ("rearrange", rr or "none"))))
+    return run_grid(points, runner=runner, workers=workers, cache=cache)
+
+
+def org_sweep(
+    arch_fn: Callable[[Tuple[int, int]], CIMArch],
+    workload_fn: Callable[[], Workload],
+    spec: FlexBlockSpec,
+    orgs: Sequence[Tuple[int, int]],
+    strategy: str = "spatial",
+    **kw,
+) -> SweepResult:
+    return mapping_sweep(arch_fn, workload_fn, spec, orgs=orgs,
+                         strategies=(strategy,), **kw)

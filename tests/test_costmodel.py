@@ -1,7 +1,8 @@
 """Cost-model behaviour tests (paper §V + Table I validation setups)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_shim import given, settings, st
 
 from repro.core import (compare, default_mapping, dense_baseline, hybrid,
                         lm_workload, mars_arch, resnet18, resnet50, row_block,

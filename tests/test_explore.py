@@ -1,0 +1,212 @@
+"""Exploration-engine tests: job keying, cache accounting, parallel
+equivalence, Pareto correctness, and legacy-wrapper compatibility."""
+import pytest
+
+from repro.core import (TABLE_II_PATTERNS, compare, default_mapping,
+                        dense_baseline, hybrid, resnet18, row_block,
+                        row_wise, simulate, sweep_mappings, sweep_sparsity,
+                        usecase_arch, vgg16)
+from repro.explore import (ExploreJob, ResultCache, SweepRunner, content_key,
+                           mapping_sweep, pareto_front, sparsity_sweep, top_k)
+
+RATIOS = (0.7, 0.8)
+
+
+@pytest.fixture(scope="module")
+def arch4():
+    return usecase_arch(4)
+
+
+def _pattern_factory(r):
+    return TABLE_II_PATTERNS(r, c_in=16)
+
+
+# ---------------------------------------------------------------------------
+# Job keying
+# ---------------------------------------------------------------------------
+
+def test_job_key_content_addressed(arch4):
+    m = default_mapping(arch4)
+    j1 = ExploreJob.simulate(arch4, resnet18(32).set_sparsity(row_wise(0.8)), m)
+    j2 = ExploreJob.simulate(arch4, resnet18(32).set_sparsity(row_wise(0.8)), m)
+    j3 = ExploreJob.simulate(arch4, resnet18(32).set_sparsity(row_wise(0.7)), m)
+    assert j1.key == j2.key and j1 == j2          # same content, new objects
+    assert j1.key != j3.key                       # ratio differs
+    assert len({j1, j2, j3}) == 2                 # hashable, set-deduplicable
+
+
+def test_dense_jobs_share_key_across_patterns(arch4):
+    """Every pattern's baseline maps to ONE cache entry."""
+    m = default_mapping(arch4)
+    d1 = ExploreJob.dense(arch4, resnet18(32).set_sparsity(row_wise(0.8)), m)
+    d2 = ExploreJob.dense(arch4, resnet18(32).set_sparsity(row_block(0.7)), m)
+    assert d1.key == d2.key
+
+
+def test_content_key_rejects_unknown_types():
+    with pytest.raises(TypeError):
+        content_key(object())
+
+
+# ---------------------------------------------------------------------------
+# Cache hit/miss accounting
+# ---------------------------------------------------------------------------
+
+def test_cache_accounting_within_run(arch4):
+    m = default_mapping(arch4)
+    wl_fn = lambda: resnet18(32)  # noqa: E731
+    res = sparsity_sweep(arch4, wl_fn, {}, ratios=RATIOS, mapping=m,
+                         pattern_factory=_pattern_factory, workers=1)
+    n_points = len(res.rows)
+    s = res.stats
+    # every point requests (sparse job, dense job); dense dedups to 1
+    assert s.requested == 2 * n_points
+    assert s.unique == n_points + 1
+    assert s.evaluated == s.unique                  # cold cache
+    assert s.cache_hits == s.requested - s.evaluated == n_points - 1
+
+
+def test_cache_accounting_across_runs(arch4):
+    m = default_mapping(arch4)
+    wl_fn = lambda: resnet18(32)  # noqa: E731
+    runner = SweepRunner(workers=1)
+    first = sparsity_sweep(arch4, wl_fn, {}, ratios=RATIOS, mapping=m,
+                           pattern_factory=_pattern_factory, runner=runner)
+    second = sparsity_sweep(arch4, wl_fn, {}, ratios=RATIOS, mapping=m,
+                            pattern_factory=_pattern_factory, runner=runner)
+    assert second.stats.evaluated == 0
+    assert second.stats.memory_hits == second.stats.unique
+    assert second.rows == first.rows
+
+
+def test_disk_cache_roundtrip(arch4, tmp_path):
+    m = default_mapping(arch4)
+    wl_fn = lambda: resnet18(32)  # noqa: E731
+    cold = sparsity_sweep(arch4, wl_fn, {}, ratios=(0.8,), mapping=m,
+                          pattern_factory=_pattern_factory, workers=1,
+                          cache=ResultCache(tmp_path / "cache"))
+    assert cold.stats.evaluated > 0
+    warm = sparsity_sweep(arch4, wl_fn, {}, ratios=(0.8,), mapping=m,
+                          pattern_factory=_pattern_factory, workers=1,
+                          cache=ResultCache(tmp_path / "cache"))
+    assert warm.stats.evaluated == 0
+    assert warm.stats.disk_hits == warm.stats.unique
+    assert warm.rows == cold.rows
+
+
+# ---------------------------------------------------------------------------
+# Parallel vs sequential row equivalence
+# ---------------------------------------------------------------------------
+
+def test_parallel_rows_match_sequential(arch4):
+    m = default_mapping(arch4, "duplicate")
+    wl_fn = lambda: resnet18(32)  # noqa: E731
+    seq = sparsity_sweep(arch4, wl_fn, {}, ratios=RATIOS, mapping=m,
+                         pattern_factory=_pattern_factory, workers=1)
+    with SweepRunner(workers=2) as runner:
+        par = sparsity_sweep(arch4, wl_fn, {}, ratios=RATIOS, mapping=m,
+                             pattern_factory=_pattern_factory, runner=runner)
+    assert par.stats.workers == 2
+    assert par.rows == seq.rows                    # bit-identical, same order
+
+
+def test_parallel_matches_handrolled_legacy_loop(arch4):
+    """The engine reproduces the pre-engine sequential sweep exactly."""
+    m = default_mapping(arch4, "duplicate")
+    wl_fn = lambda: resnet18(32)  # noqa: E731
+    dense = dense_baseline(arch4, wl_fn(), m)
+    legacy = []
+    for ratio in RATIOS:
+        for name, spec in _pattern_factory(ratio).items():
+            rep = simulate(arch4, wl_fn().set_sparsity(spec), m)
+            c = compare(rep, dense)
+            legacy.append((name, ratio, rep.latency_ms, rep.total_energy_uj,
+                           c["speedup"], c["energy_saving"]))
+    with SweepRunner(workers=2) as runner:
+        par = sparsity_sweep(arch4, wl_fn, {}, ratios=RATIOS, mapping=m,
+                             pattern_factory=_pattern_factory, runner=runner)
+    engine = [(r["pattern"], r["ratio"], r["latency_ms"], r["energy_uj"],
+               r["speedup"], r["energy_saving"]) for r in par.rows]
+    assert engine == legacy
+
+
+# ---------------------------------------------------------------------------
+# Legacy wrapper compatibility
+# ---------------------------------------------------------------------------
+
+def test_sweep_sparsity_wrapper_schema(arch4):
+    rows = sweep_sparsity(arch4, lambda: resnet18(32), {}, ratios=(0.8,),
+                          pattern_factory=_pattern_factory)
+    assert rows and set(rows[0]) == {
+        "arch", "workload", "pattern", "ratio", "mapping", "latency_ms",
+        "energy_uj", "utilization", "speedup", "energy_saving", "index_kib"}
+
+
+def test_sweep_mappings_wrapper_schema():
+    rows = sweep_mappings(lambda org: usecase_arch(16, org),
+                          lambda: vgg16(32), hybrid(2, 16, 0.8),
+                          orgs=((4, 4),), strategies=("spatial",))
+    assert rows and {"org", "rearrange", "speedup"} <= set(rows[0])
+    assert rows[0]["org"] == "4x4" and rows[0]["ratio"] is None
+
+
+def test_mapping_sweep_engine_matches_wrapper():
+    kw = dict(orgs=((4, 4), (2, 8)), strategies=("spatial", "duplicate"))
+    wrapper = sweep_mappings(lambda org: usecase_arch(16, org),
+                             lambda: resnet18(32), hybrid(2, 16, 0.8), **kw)
+    engine = mapping_sweep(lambda org: usecase_arch(16, org),
+                           lambda: resnet18(32), hybrid(2, 16, 0.8),
+                           workers=1, **kw)
+    assert wrapper == engine.rows
+
+
+# ---------------------------------------------------------------------------
+# Pareto frontier / top-k
+# ---------------------------------------------------------------------------
+
+def test_pareto_hand_checked_three_points():
+    rows = [
+        {"name": "a", "latency_ms": 1.0, "energy_uj": 3.0},
+        {"name": "b", "latency_ms": 2.0, "energy_uj": 1.0},
+        {"name": "c", "latency_ms": 3.0, "energy_uj": 2.0},   # dominated by b
+    ]
+    objs = (("latency_ms", "min"), ("energy_uj", "min"))
+    front = pareto_front(rows, objs)
+    assert [r["name"] for r in front] == ["a", "b"]
+
+
+def test_pareto_direction_and_missing_columns():
+    rows = [
+        {"name": "a", "latency_ms": 1.0, "speedup": 2.0},
+        {"name": "b", "latency_ms": 1.0, "speedup": 3.0},     # dominates a
+        {"name": "derived"},                                   # no objectives
+    ]
+    objs = (("latency_ms", "min"), ("speedup", "max"))
+    front = pareto_front(rows, objs)
+    assert [r["name"] for r in front] == ["b"]
+
+
+def test_pareto_keeps_duplicates_and_order():
+    rows = [{"latency_ms": 1.0, "energy_uj": 1.0, "id": i} for i in range(3)]
+    front = pareto_front(rows, (("latency_ms", "min"), ("energy_uj", "min")))
+    assert [r["id"] for r in front] == [0, 1, 2]
+
+
+def test_top_k():
+    rows = [{"m": v} for v in (3.0, 1.0, 2.0)]
+    assert [r["m"] for r in top_k(rows, "m", 2)] == [1.0, 2.0]
+    assert [r["m"] for r in top_k(rows, "m", 2, direction="max")] == [3.0, 2.0]
+
+
+def test_sweep_result_export(arch4, tmp_path):
+    m = default_mapping(arch4)
+    res = sparsity_sweep(arch4, lambda: resnet18(32), {}, ratios=(0.8,),
+                         mapping=m, pattern_factory=_pattern_factory,
+                         workers=1)
+    csv_path, json_path = tmp_path / "r.csv", tmp_path / "r.json"
+    res.to_csv(csv_path)
+    res.to_json(json_path)
+    assert csv_path.read_text().startswith("arch,workload,pattern")
+    assert "\"stats\"" in json_path.read_text()
+    front = res.pareto()
+    assert front and all(r in res.rows for r in front)

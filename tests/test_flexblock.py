@@ -3,7 +3,8 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_shim import given, settings, st
 
 from repro.core.flexblock import (FlexBlockSpec, FullBlock, IntraBlock,
                                   TABLE_II_PATTERNS, column_block,

@@ -1,7 +1,8 @@
 """Pruning workflow tests: Eq. 1 / Eq. 2 semantics (paper §IV-D)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_shim import given, settings, st
 
 import jax.numpy as jnp
 
