@@ -17,7 +17,11 @@ Layout / grid:
   (causal) — a dynamic fori_loop range from the program id.
 * BlockSpec keeps the q tile + the running (m, l, acc) in VMEM; kv rows
   stream tile-by-tile via ``pl.dslice`` loads.  TQ/TK default to the
-  MXU-aligned 128; hd is the lane dimension.
+  MXU-aligned 128; hd is the lane dimension.  The BH grid dimension is
+  squeezed out of every block (``None`` block dims) so refs are plain
+  2-D (rows, hd) tiles — no scalar indices in the load/store paths
+  (bare int indices break interpret-mode state discharge on the 0.4.x
+  jax line).
 
 Validated in interpret mode against the pure-jnp oracle
 (:func:`repro.kernels.ref.flash_attention_ref`) across shapes, dtypes,
@@ -39,9 +43,9 @@ _NEG = -1e30  # finite -inf stand-in: keeps exp()/max() NaN-free in bf16
 
 def _kernel(q_ref, k_ref, v_ref, o_ref, *, causal, window, tile_k,
             seq_kv, scale):
-    TQ, hd = q_ref.shape[1], q_ref.shape[2]
+    TQ, hd = q_ref.shape
     qi = pl.program_id(1)
-    q = q_ref[0].astype(jnp.float32) * scale              # (TQ, hd)
+    q = q_ref[...].astype(jnp.float32) * scale            # (TQ, hd)
     q_lo = qi * TQ
     q_idx = q_lo + jax.lax.iota(jnp.int32, TQ)
 
@@ -58,8 +62,8 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, *, causal, window, tile_k,
     def body(ki, carry):
         m_prev, l_prev, acc_prev = carry
         start = ki * tile_k
-        kt = pl.load(k_ref, (0, pl.dslice(start, tile_k), slice(None)))
-        vt = pl.load(v_ref, (0, pl.dslice(start, tile_k), slice(None)))
+        kt = pl.load(k_ref, (pl.dslice(start, tile_k), slice(None)))
+        vt = pl.load(v_ref, (pl.dslice(start, tile_k), slice(None)))
         k_idx = start + jax.lax.iota(jnp.int32, tile_k)
         s = jnp.dot(q, kt.astype(jnp.float32).T,
                     preferred_element_type=jnp.float32)   # (TQ, TK)
@@ -82,7 +86,7 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, *, causal, window, tile_k,
     l0 = jnp.zeros((TQ,), jnp.float32)
     a0 = jnp.zeros((TQ, hd), jnp.float32)
     m, l, acc = jax.lax.fori_loop(lo, hi, body, (m0, l0, a0))
-    o_ref[0] = (acc / jnp.maximum(l, 1e-20)[:, None]).astype(o_ref.dtype)
+    o_ref[...] = (acc / jnp.maximum(l, 1e-20)[:, None]).astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=(
@@ -109,11 +113,11 @@ def flash_attention_pallas(
                           tile_k=tile_k, seq_kv=Skv, scale=scale),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, tile_q, hd), lambda b, i: (b, i, 0)),
-            pl.BlockSpec((1, Skv, hd), lambda b, i: (b, 0, 0)),
-            pl.BlockSpec((1, Skv, hd), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((None, tile_q, hd), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((None, Skv, hd), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((None, Skv, hd), lambda b, i: (b, 0, 0)),
         ],
-        out_specs=pl.BlockSpec((1, tile_q, hd), lambda b, i: (b, i, 0)),
+        out_specs=pl.BlockSpec((None, tile_q, hd), lambda b, i: (b, i, 0)),
         out_shape=jax.ShapeDtypeStruct((BH, Sq, hd), q.dtype),
         interpret=interpret,
     )(q, k, v)

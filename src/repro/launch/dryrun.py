@@ -39,6 +39,7 @@ from ..configs.base import ArchConfig, ShapeCell, SHAPE_CELLS
 from ..distributed import sharding as shard_rules
 from ..distributed.sharding import (batch_spec, cache_specs, spec_for_param,
                                     tree_shardings)
+from ..runtime import compat
 from ..models.transformer import decode_step, forward, init_cache, init_params, prefill
 from ..train.optimizer import AdamWConfig, adamw_init
 from ..train.step import make_train_step
@@ -120,7 +121,7 @@ def lower_cell(cfg: ArchConfig, cell: ShapeCell, mesh, *,
         step = make_train_step(cfg, AdamWConfig(), remat=remat,
                                microbatches=microbatches,
                                remat_policy=remat_policy)
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             lowered = jax.jit(
                 step,
                 in_shardings=(p_shard, o_shard, bshard),
@@ -139,7 +140,7 @@ def lower_cell(cfg: ArchConfig, cell: ShapeCell, mesh, *,
             kw = {k: v for k, v in inputs.items() if k != "tokens"}
             return prefill(params, inputs["tokens"], cfg, **kw)
 
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             lowered = jax.jit(
                 prefill_fn, in_shardings=(p_shard, arg_shards),
             ).lower(params_t, specs)
@@ -159,7 +160,7 @@ def lower_cell(cfg: ArchConfig, cell: ShapeCell, mesh, *,
     def serve_step(params, tokens, cache):
         return decode_step(params, tokens, cfg, cache)
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         lowered = jax.jit(
             serve_step,
             in_shardings=(p_shard, tok_shard, c_shard),

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from ..distributed.sharding import maybe_shard
+from ..runtime import compat
 
 Params = Dict[str, Any]
 
@@ -365,7 +366,7 @@ def _swa_seqpar_attention(x, p, cfg, mesh, *, window: int,
         return y, kc, vc
 
     wspec = P(None, None, None)
-    return jax.shard_map(
+    return compat.shard_map(
         body, mesh=mesh,
         in_specs=(P(baxes, None, None), wspec, wspec, wspec, wspec),
         out_specs=(P(baxes, None, None), P(baxes, None, None, None),
@@ -401,7 +402,7 @@ def attention_block(
 
     # sequence-parallel path: static sliding window + non-divisible heads
     # (otherwise head sharding already parallelises over "model")
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
     if (cache_kv is None and cross_kv is None and causal
             and isinstance(window, int) and not cfg.qk_norm
             and prefix == 0 and not mesh.empty
@@ -629,7 +630,7 @@ def _moe_block_ep(x: jnp.ndarray, p: Params, cfg, mesh, baxes) -> jnp.ndarray:
 
     gate_arg = w_gate if gated else jnp.zeros((), x.dtype)
     gate_spec = wspec_up if gated else P()
-    return jax.shard_map(
+    return compat.shard_map(
         ep_body, mesh=mesh,
         in_specs=(P(baxes, None, None), P(None, None),
                   wspec_up, wspec_dn, gate_spec),
@@ -644,7 +645,7 @@ def moe_block(x: jnp.ndarray, p: Params, cfg) -> jnp.ndarray:
     falls back to the global-dispatch path otherwise (single device /
     smoke tests)."""
     from ..distributed.sharding import get_options
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
     if (get_options().ep_shardmap and not mesh.empty
             and "model" in mesh.axis_names
             and cfg.n_experts % mesh.shape["model"] == 0):

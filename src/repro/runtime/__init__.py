@@ -1,0 +1,1 @@
+"""Runtime support layer: jax version-compat shims for the execution plane."""

@@ -1,0 +1,165 @@
+"""Version-compat shims for jax APIs the execution plane depends on.
+
+The mesh-context API moved between jax releases: 0.5+ exposes
+``jax.set_mesh`` / ``jax.sharding.get_abstract_mesh`` / ``jax.shard_map``
+(with ``check_vma``), while 0.4.x only has the legacy ``Mesh`` context
+manager and ``jax.experimental.shard_map.shard_map`` (with ``check_rep``).
+Every call site in the repo goes through this module so the same model
+code runs on both lines:
+
+* :func:`set_mesh` — context manager activating a mesh for sharding
+  resolution (``with_sharding_constraint`` with bare ``PartitionSpec``)
+  and :func:`get_abstract_mesh` discovery.
+* :func:`get_abstract_mesh` — the active mesh, or an EMPTY sentinel with
+  the same ``.empty`` / ``.axis_names`` / ``.shape`` surface.  On 0.4.x
+  the returned object is the *concrete* ``Mesh`` (its ``shape`` mapping
+  and ``axis_names`` match ``AbstractMesh``), which is exactly what the
+  0.4.x ``shard_map`` needs anyway.
+* :func:`shard_map` — keyword-compatible with the 0.5+ signature
+  (``check_vma``), mapped to ``check_rep`` on 0.4.x.
+
+Import-time version guard: see ``_SUPPORTED`` below; kept in sync with
+the ``[jax]`` extra in ``pyproject.toml``.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Optional, Tuple
+
+import jax
+
+__all__ = ["get_abstract_mesh", "set_mesh", "shard_map", "JAX_VERSION",
+           "HAS_NATIVE_MESH_CONTEXT"]
+
+# ---------------------------------------------------------------------------
+# Supported-version guard (kept in sync with pyproject's [jax] extra)
+# ---------------------------------------------------------------------------
+
+_SUPPORTED = ((0, 4, 30), (0, 8, 0))   # [lower, upper) — upper exclusive
+
+
+def _parse_version(v: str) -> Tuple[int, ...]:
+    parts = []
+    for tok in v.split(".")[:3]:
+        digits = ""
+        for ch in tok:            # leading digits only: "0rc1" → 0
+            if not ch.isdigit():
+                break
+            digits += ch
+        parts.append(int(digits) if digits else 0)
+    while len(parts) < 3:
+        parts.append(0)
+    return tuple(parts)
+
+
+JAX_VERSION: Tuple[int, ...] = _parse_version(jax.__version__)
+
+if not (_SUPPORTED[0] <= JAX_VERSION < _SUPPORTED[1]):
+    raise ImportError(
+        f"repro's jax execution plane supports jax>="
+        f"{'.'.join(map(str, _SUPPORTED[0]))},<"
+        f"{'.'.join(map(str, _SUPPORTED[1]))} but found jax "
+        f"{jax.__version__}.  The mesh-context and shard_map APIs this "
+        f"repo shims (repro/runtime/compat.py) have not been validated "
+        f"outside that range — install a supported jax "
+        f"(pip install 'ciminus-repro[jax]') or extend the shim.")
+
+# ``jax.set_mesh`` + ``jax.sharding.get_abstract_mesh`` + ``jax.shard_map``
+# all appeared together on the 0.5+ line; probe once.
+HAS_NATIVE_MESH_CONTEXT: bool = (
+    hasattr(jax, "set_mesh")
+    and hasattr(jax.sharding, "get_abstract_mesh")
+    and hasattr(jax, "shard_map"))
+
+
+if HAS_NATIVE_MESH_CONTEXT:
+    import inspect
+
+    # The check_rep→check_vma rename landed later than jax.shard_map
+    # itself (mid 0.5/0.6 releases expose the new entry point with the
+    # old kwarg), so probe the signature rather than the version.
+    try:
+        _REP_KWARG = ("check_vma"
+                      if "check_vma" in inspect.signature(
+                          jax.shard_map).parameters
+                      else "check_rep")
+    except (ValueError, TypeError):  # pragma: no cover - exotic wrappers
+        _REP_KWARG = "check_vma"
+
+    def get_abstract_mesh():
+        """The mesh activated by :func:`set_mesh` (EMPTY-like when none)."""
+        return jax.sharding.get_abstract_mesh()
+
+    def set_mesh(mesh):
+        """Activate ``mesh`` for sharding resolution + discovery."""
+        return jax.set_mesh(mesh)
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+        """0.5+-signature shard_map (``check_vma``) on any supported jax."""
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs,
+                             **{_REP_KWARG: check_vma})
+
+else:
+    from jax.experimental.shard_map import shard_map as _legacy_shard_map
+
+    class _EmptyMesh:
+        """Sentinel matching the ``AbstractMesh`` surface the repo uses."""
+        empty = True
+        axis_names: Tuple[str, ...] = ()
+        shape: dict = {}
+
+        def __repr__(self) -> str:  # pragma: no cover - debugging aid
+            return "_EmptyMesh()"
+
+    _EMPTY = _EmptyMesh()
+
+    class _MeshState(threading.local):
+        def __init__(self):
+            self.stack = []
+
+    _STATE = _MeshState()
+
+    def get_abstract_mesh():
+        """The innermost :func:`set_mesh` mesh; EMPTY sentinel otherwise.
+
+        On 0.4.x this returns the *concrete* ``Mesh`` — its ``.empty``,
+        ``.axis_names`` and ``.shape`` (an axis-name→size mapping) match
+        the ``AbstractMesh`` the 0.5+ API returns, and the legacy
+        ``shard_map`` requires a concrete mesh anyway.  Also honours a
+        plain ``with mesh:`` context entered without the shim.
+        """
+        if _STATE.stack:
+            return _STATE.stack[-1]
+        try:
+            from jax.interpreters import pxla
+            phys = pxla.thread_resources.env.physical_mesh
+            if not phys.empty:
+                return phys
+        except Exception:  # pragma: no cover - jax internals moved
+            pass
+        return _EMPTY
+
+    @contextlib.contextmanager
+    def set_mesh(mesh):
+        """Activate ``mesh``: legacy ``Mesh`` context (so bare-
+        ``PartitionSpec`` ``with_sharding_constraint`` resolves) plus the
+        discovery stack backing :func:`get_abstract_mesh`."""
+        _STATE.stack.append(mesh)
+        try:
+            with mesh:
+                yield mesh
+        finally:
+            _STATE.stack.pop()
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+        """0.5+-signature shard_map (``check_vma``) on 0.4.x jax.
+
+        ``check_vma`` maps to the 0.4.x ``check_rep`` flag (same meaning:
+        verify per-axis replication of outputs).  ``mesh`` may be the
+        object returned by :func:`get_abstract_mesh` — concrete on this
+        line, which is what the legacy implementation requires.
+        """
+        return _legacy_shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_rep=check_vma)

@@ -122,7 +122,8 @@ class Trainer:
                 retries += 1
                 if retries > self.tcfg.max_retries:
                     raise RuntimeError(
-                        f"step {step} failed {retries} times; aborting"
+                        f"step {step} failed {retries} times; aborting "
+                        f"(root cause: {type(e).__name__}: {e})"
                     ) from e
                 # failure recovery: restore last complete checkpoint
                 if self.tcfg.ckpt_dir and latest_step(self.tcfg.ckpt_dir) is not None:

@@ -1,0 +1,165 @@
+"""Unit tests for the jax version-compat shim (repro.runtime.compat).
+
+Exercises mesh discovery, mesh-scoped sharding construction, and
+shard_map on whatever jax line is installed — the shim is the single
+point every execution-plane call site routes through, so these tests
+pin its contract independent of the model code.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.runtime import compat
+
+
+# ---------------------------------------------------------------------------
+# version guard
+# ---------------------------------------------------------------------------
+
+def test_version_parse_and_guard():
+    assert compat._parse_version("0.4.37") == (0, 4, 37)
+    assert compat._parse_version("0.5.0") == (0, 5, 0)
+    assert compat._parse_version("0.5.0rc1") == (0, 5, 0)
+    # the installed jax made it through the import-time guard
+    assert compat._SUPPORTED[0] <= compat.JAX_VERSION < compat._SUPPORTED[1]
+
+
+def test_supported_range_matches_pyproject():
+    import os
+    import re
+    root = os.path.join(os.path.dirname(__file__), "..")
+    with open(os.path.join(root, "pyproject.toml")) as f:
+        m = re.search(r'"jax>=([\d.]+),<([\d.]+)"', f.read())
+    assert m, "pyproject [jax] extra must pin a jax range"
+    assert compat._parse_version(m.group(1)) == compat._SUPPORTED[0]
+    assert compat._parse_version(m.group(2)) == compat._SUPPORTED[1]
+
+
+# ---------------------------------------------------------------------------
+# mesh discovery
+# ---------------------------------------------------------------------------
+
+def _local_mesh():
+    return jax.make_mesh((jax.device_count(), 1), ("data", "model"))
+
+
+def test_no_mesh_is_empty():
+    m = compat.get_abstract_mesh()
+    assert m.empty
+    assert tuple(m.axis_names) == ()
+
+
+def test_set_mesh_discovery_and_restore():
+    mesh = _local_mesh()
+    assert compat.get_abstract_mesh().empty
+    with compat.set_mesh(mesh):
+        active = compat.get_abstract_mesh()
+        assert not active.empty
+        assert tuple(active.axis_names) == ("data", "model")
+        assert active.shape["model"] == 1
+        assert active.shape["data"] == jax.device_count()
+    assert compat.get_abstract_mesh().empty
+
+
+def test_set_mesh_restores_on_exception():
+    mesh = _local_mesh()
+    with pytest.raises(RuntimeError, match="boom"):
+        with compat.set_mesh(mesh):
+            raise RuntimeError("boom")
+    assert compat.get_abstract_mesh().empty
+
+
+def test_set_mesh_nesting():
+    m1 = _local_mesh()
+    m2 = jax.make_mesh((1, jax.device_count()), ("pod", "model"))
+    with compat.set_mesh(m1):
+        with compat.set_mesh(m2):
+            assert tuple(compat.get_abstract_mesh().axis_names) == \
+                ("pod", "model")
+        assert tuple(compat.get_abstract_mesh().axis_names) == \
+            ("data", "model")
+
+
+# ---------------------------------------------------------------------------
+# sharding construction on the active mesh
+# ---------------------------------------------------------------------------
+
+def test_filter_spec_tracks_active_mesh():
+    from repro.distributed.sharding import filter_spec
+    spec = P(("pod", "data"), None, "model")
+    assert filter_spec(spec) is None              # no mesh → no-op marker
+    with compat.set_mesh(_local_mesh()):
+        assert filter_spec(spec) == P(("data",), None, "model")
+
+
+def test_maybe_shard_inside_jit_under_mesh():
+    """with_sharding_constraint with a bare PartitionSpec must resolve
+    against the compat-activated mesh on every supported jax line."""
+    from repro.distributed.sharding import maybe_shard
+
+    x = jnp.arange(8.0).reshape(4, 2)
+    f = jax.jit(lambda x: maybe_shard(x * 2, P("data", None)))
+    with compat.set_mesh(_local_mesh()):
+        y = f(x)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(x) * 2)
+    # and off-mesh it is an identity wrapper
+    np.testing.assert_array_equal(
+        np.asarray(jax.jit(lambda x: maybe_shard(x, P("data", None)))(x)),
+        np.asarray(x))
+
+
+def test_tree_shardings_lower_with_in_shardings():
+    from repro.distributed.sharding import tree_shardings
+    mesh = _local_mesh()
+    tree = {"wq": jnp.zeros((2, 8, 16, 8)), "b": jnp.zeros((3,))}
+    shardings = tree_shardings(mesh, tree)
+    assert all(isinstance(s, NamedSharding)
+               for s in jax.tree.leaves(shardings))
+    with compat.set_mesh(mesh):
+        lowered = jax.jit(
+            lambda t: jax.tree.map(lambda l: l + 1, t),
+            in_shardings=(shardings,),
+        ).lower(tree)
+    assert lowered.compile() is not None
+
+
+# ---------------------------------------------------------------------------
+# shard_map
+# ---------------------------------------------------------------------------
+
+def test_shard_map_runs_on_installed_jax():
+    mesh = _local_mesh()
+    n = jax.device_count()
+    x = jnp.arange(4 * n, dtype=jnp.float32).reshape(n, 4)
+
+    def body(xl):
+        i = jax.lax.axis_index("data")
+        return xl + i.astype(jnp.float32)
+
+    with compat.set_mesh(mesh):
+        y = compat.shard_map(
+            body, mesh=compat.get_abstract_mesh(),
+            in_specs=(P("data", None),), out_specs=P("data", None),
+            check_vma=False,
+        )(x)
+    expect = np.asarray(x) + np.arange(n)[:, None]
+    np.testing.assert_array_equal(np.asarray(y), expect)
+
+
+def test_shard_map_collective():
+    mesh = _local_mesh()
+    n = jax.device_count()
+    x = jnp.ones((n, 2), jnp.float32)
+
+    def body(xl):
+        return jax.lax.psum(xl, "data")
+
+    with compat.set_mesh(mesh):
+        y = compat.shard_map(
+            body, mesh=compat.get_abstract_mesh(),
+            in_specs=(P("data", None),), out_specs=P("data", None),
+            check_vma=False,
+        )(x)
+    np.testing.assert_array_equal(np.asarray(y), np.full((n, 2), n))

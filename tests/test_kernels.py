@@ -123,6 +123,9 @@ def test_bitserial_all_zero_input():
     (256, 256, 64, 64, 64, True, 64),      # sliding-window skip
     (128, 256, 32, 32, 64, False, None),   # cross/bidirectional
     (256, 256, 16, 128, 128, True, None),  # MXU-sized q tiles
+    (128, 128, 32, 32, 32, False, 64),     # non-causal + window: completes
+    (128, 128, 32, 32, 32, True, 64),      # the causal × window × dtype
+                                           # regression cross vs ref.py
 ])
 @pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
 def test_flash_attention_sweep(Sq, Skv, hd, tq, tk, causal, window, dtype):

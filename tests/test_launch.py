@@ -109,6 +109,7 @@ def test_tiny_lower_on_local_mesh():
     """End-to-end lower+compile of a reduced arch on the local 1-device
     mesh — the same code path the 512-device dry-run exercises."""
     from repro.launch.mesh import make_local_mesh
+    from repro.runtime import compat
     from repro.train.optimizer import AdamWConfig, adamw_init
     from repro.train.step import make_train_step
     from repro.models.transformer import init_params
@@ -124,7 +125,7 @@ def test_tiny_lower_on_local_mesh():
         "labels": jax.ShapeDtypeStruct((4, 16), jnp.int32),
     }
     step = make_train_step(cfg, AdamWConfig())
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         lowered = jax.jit(step).lower(params, opt, batch)
     compiled = lowered.compile()
     assert compiled.cost_analysis() is not None

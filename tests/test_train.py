@@ -129,10 +129,13 @@ def test_trainer_aborts_after_max_retries(tmp_path):
     tr = Trainer(CFG, AdamWConfig(), tcfg, _pipeline())
 
     def always_fail(step):
-        raise RuntimeError("persistent failure")
+        raise ValueError("persistent failure")
 
-    with pytest.raises(RuntimeError, match="aborting"):
+    with pytest.raises(RuntimeError, match="aborting") as excinfo:
         tr.train(fault_hook=always_fail)
+    # the abort chains the root cause and names it in the message
+    assert isinstance(excinfo.value.__cause__, ValueError)
+    assert "ValueError: persistent failure" in str(excinfo.value)
 
 
 def test_gradient_compression_roundtrip():
