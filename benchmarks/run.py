@@ -6,17 +6,23 @@
   mapping_exploration  paper Fig. 11–12         (§VII-C use-case)
 
 Usage:  PYTHONPATH=src python -m benchmarks.run [--only NAME] [--csv FILE]
-                                                [--workers N]
+                                                [--workers N] [--json [FILE]]
 Each row prints as ``name,us_per_call,<derived...>``.
 
 ``--workers`` fans the exploration suites (sparsity / mapping) out
 across processes via the :mod:`repro.explore` engine; their
 ``engine/stats`` rows report cache-hit accounting either way.
+
+``--json`` writes a machine-readable summary (default
+``BENCH_run.json``): per-suite wall time + row counts and every
+``us_per_call`` row — the artifact CI archives so the perf trajectory
+across commits is a file diff, not log archaeology.
 """
 from __future__ import annotations
 
 import argparse
 import csv
+import json
 import time
 from typing import Dict, List
 
@@ -46,12 +52,17 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--only", choices=sorted(SUITES), default=None)
     ap.add_argument("--csv", default=None, help="also write rows to CSV")
+    ap.add_argument("--json", nargs="?", const="BENCH_run.json", default=None,
+                    metavar="FILE",
+                    help="write a JSON summary (per-suite wall time + "
+                         "us_per_call rows); FILE defaults to BENCH_run.json")
     ap.add_argument("--workers", type=int, default=1,
                     help="process count for the exploration suites "
                          "(default 1 = sequential; 0 = one per CPU)")
     args = ap.parse_args(argv)
 
     all_rows: List[Dict] = []
+    suites_summary: Dict[str, Dict] = {}
     names = [args.only] if args.only else list(SUITES)
     t_total = time.perf_counter()
     ok = True
@@ -67,13 +78,18 @@ def main(argv=None) -> int:
         except Exception as e:  # noqa: BLE001 — report and continue
             print(f"  SUITE FAILED: {type(e).__name__}: {e}", flush=True)
             ok = False
+            suites_summary[name] = {
+                "ok": False, "wall_s": round(time.perf_counter() - t0, 3),
+                "rows": 0, "error": f"{type(e).__name__}: {e}"}
             continue
         for r in rows:
             r.setdefault("suite", name)
             print("  " + _fmt(r), flush=True)
         all_rows.extend(rows)
-        print(f"  ({len(rows)} rows, {time.perf_counter() - t0:.1f}s)",
-              flush=True)
+        wall = time.perf_counter() - t0
+        suites_summary[name] = {"ok": True, "wall_s": round(wall, 3),
+                                "rows": len(rows)}
+        print(f"  ({len(rows)} rows, {wall:.1f}s)", flush=True)
 
     if args.csv and all_rows:
         keys: List[str] = []
@@ -87,8 +103,25 @@ def main(argv=None) -> int:
             w.writerows(all_rows)
         print(f"wrote {len(all_rows)} rows to {args.csv}")
 
-    print(f"total: {len(all_rows)} rows in "
-          f"{time.perf_counter() - t_total:.1f}s")
+    total_s = time.perf_counter() - t_total
+    if args.json:
+        summary = {
+            "ok": ok,
+            "total_s": round(total_s, 3),
+            "workers": args.workers,
+            "suites": suites_summary,
+            "rows": [{"suite": r.get("suite"), "name": r.get("name"),
+                      "us_per_call": r.get("us_per_call", 0.0),
+                      **{k: v for k, v in r.items()
+                         if k not in ("suite", "name", "us_per_call")}}
+                     for r in all_rows],
+        }
+        with open(args.json, "w") as f:
+            json.dump(summary, f, indent=1, default=str)
+            f.write("\n")
+        print(f"wrote JSON summary to {args.json}")
+
+    print(f"total: {len(all_rows)} rows in {total_s:.1f}s")
     return 0 if ok else 1
 
 

@@ -1,0 +1,55 @@
+"""Calibration subsystem: close the model↔execution loop.
+
+The analytic plane (:mod:`repro.core`) prices designs against assumed
+peaks; the execution plane (:mod:`repro.launch`, :mod:`repro.kernels`)
+measures real programs.  This package connects them:
+
+* :mod:`.harvest` — collect samples from dry-run ledgers and Pallas
+  kernel microbenchmarks;
+* :mod:`.fit`     — bounded least-squares roofline fit over the samples;
+* :mod:`.profile` — schema-versioned, content-addressed
+  ``CalibrationProfile`` JSONs (with a bundled analytic default so
+  everything works offline);
+
+and the consumers apply them: ``repro.launch.roofline`` resolves its
+peaks from a profile, ``repro.core.costmodel.simulate`` accepts one to
+scale latency/energy, and ``python -m repro.explore --profile`` runs
+calibrated sweeps.
+
+CLI: ``python -m repro.calibrate {collect,fit,show,diff}``.
+"""
+from .profile import (DEFAULT_PROFILE_NAME, SCHEMA_VERSION,
+                      CalibrationProfile, ProfileError, bundled_profiles_dir,
+                      default_profile, resolve_profile)
+
+__all__ = [
+    "CalibrationProfile", "ProfileError", "SCHEMA_VERSION",
+    "DEFAULT_PROFILE_NAME", "default_profile", "resolve_profile",
+    "bundled_profiles_dir",
+    "Sample", "HarvestReport", "record_to_sample", "from_ledger",
+    "read_samples", "write_samples", "microbench_kernels",
+    "FitError", "PEAK_BOUNDS", "bounded_lsq", "fit_profile",
+]
+
+# .fit pulls in numpy and .harvest can reach for jax; profile *reading*
+# (roofline, the explore CLI) must stay stdlib-only, so those two
+# modules resolve lazily on first attribute access (PEP 562).
+_LAZY = {name: ".fit" for name in
+         ("FitError", "PEAK_BOUNDS", "bounded_lsq", "fit_profile")}
+_LAZY.update({name: ".harvest" for name in
+              ("Sample", "HarvestReport", "record_to_sample", "from_ledger",
+               "read_samples", "write_samples", "microbench_kernels")})
+
+
+def __getattr__(name: str):
+    if name in _LAZY:
+        from importlib import import_module
+
+        value = getattr(import_module(_LAZY[name], __name__), name)
+        globals()[name] = value      # cache: __getattr__ runs once per name
+        return value
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_LAZY))

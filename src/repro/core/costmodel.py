@@ -28,13 +28,33 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from ..calibrate.profile import CalibrationProfile
 from .flexblock import FlexBlockSpec
 from .hardware import CIMArch
 from .mapping import MappingSpec, reshape_and_compress
 from .report import CostReport, OpCost
 from .workload import OpNode, Workload
 
-__all__ = ["simulate", "dense_baseline", "dense_twin", "compare"]
+__all__ = ["simulate", "dense_baseline", "dense_twin", "compare",
+           "op_class"]
+
+
+def op_class(op: OpNode) -> str:
+    """Map a workload op to a calibration op class.
+
+    These are the classes the harvest plane measures
+    (:func:`repro.calibrate.microbench_kernels`): attention-shaped MVMs
+    (the ``attn_*`` *score/context* matmuls, ``kind="matmul"`` in
+    :func:`~repro.core.workload.lm_workload` → the flash-attention
+    kernel), every other MVM — including the ``attn_{q,k,v,o}``
+    projections, which are plain ``fc`` GEMMs executed by the matmul
+    kernels — and everything else on the post-processing unit.
+    """
+    if op.is_mvm or op.kind == "dwconv":
+        if op.kind == "matmul" and op.name.startswith("attn"):
+            return "attention"
+        return "matmul"
+    return "post_proc"
 
 
 @dataclasses.dataclass
@@ -306,6 +326,7 @@ def simulate(
     *,
     input_sparsity: Optional[Dict[str, float]] = None,
     masks: Optional[Dict[str, np.ndarray]] = None,
+    profile: Optional[CalibrationProfile] = None,
 ) -> CostReport:
     """Run the CIMinus cost simulation.
 
@@ -314,6 +335,14 @@ def simulate(
     ``masks`` maps op name → FullBlock block keep-grid from the pruning
     workflow; otherwise seeded random grids with exact Φ are synthesised
     (the paper's auto-generated mask path).
+    ``profile`` is an optional measured :class:`CalibrationProfile`
+    (see :mod:`repro.calibrate`): each op's latency is divided by the
+    profile's efficiency factor for its :func:`op_class` — a class
+    achieving half the fitted roofline takes twice the analytic latency
+    — and the static-energy term follows the stretched schedule.
+    Dynamic energy is access-count-based and therefore unchanged.
+    ``profile=None`` (and any profile with all-1.0 efficiencies, like
+    the bundled default) reproduces the analytic model bit-for-bit.
     """
     arch.validate()
     acct = _Accounting(arch)
@@ -331,6 +360,10 @@ def simulate(
             continue
         else:
             oc = _other_op_cost(op, arch, acct)
+        if profile is not None:
+            eff = profile.efficiency_for(op_class(op))
+            if eff != 1.0:
+                oc.latency_cycles /= eff
         op_costs.append(oc)
 
     # Ops are data-dependent along the DAG, so they serialise at op
@@ -377,11 +410,12 @@ def dense_twin(arch: CIMArch, workload: Workload) -> tuple:
 
 
 def dense_baseline(arch: CIMArch, workload: Workload,
-                   mapping: MappingSpec) -> CostReport:
+                   mapping: MappingSpec,
+                   profile: Optional[CalibrationProfile] = None) -> CostReport:
     """The paper's dense baseline: same architecture configuration, no
     sparsity-support hardware engaged, dense weights."""
     dense_arch, dense_wl = dense_twin(arch, workload)
-    return simulate(dense_arch, dense_wl, mapping)
+    return simulate(dense_arch, dense_wl, mapping, profile=profile)
 
 
 def compare(sparse: CostReport, dense: CostReport) -> Dict[str, float]:

@@ -15,6 +15,13 @@ Examples::
         --workers 4 --cache-dir .cim_cache --csv sparsity.csv --pareto
     python -m repro.explore mapping --model vgg16 --rearrange none,slice
     python -m repro.explore lm --config llama3-8b --seq-len 64 --top-k 3
+
+``--profile PATH`` (or ``--profile default``) reruns any sweep in
+*calibrated* mode: every job carries the measured
+:class:`repro.calibrate.CalibrationProfile`, so rows are priced by
+fitted peaks/efficiencies instead of the analytic assumptions.
+``--diff-analytic`` additionally evaluates the analytic twin of every
+row and prints the calibrated/analytic latency and energy ratios.
 """
 from __future__ import annotations
 
@@ -48,6 +55,26 @@ def _print_rows(rows: List[Dict], title: str) -> None:
             else:
                 cells.append(f"{str(v):>12}")
         print("  " + "  ".join(cells))
+
+
+_KEY_COLS = ("pattern", "ratio", "mapping", "org", "rearrange")
+
+
+def _print_diff(calibrated: List[Dict], analytic: List[Dict]) -> None:
+    """Per-row calibrated-vs-analytic comparison (grids enumerate in the
+    same order, so rows pair positionally; keys shown for readability)."""
+    print(f"\n== calibrated vs analytic ({len(calibrated)} rows) ==")
+    hdr = [c for c in _KEY_COLS if any(c in r for r in calibrated)]
+    print("  " + "  ".join(f"{c:>10}" for c in hdr)
+          + f"{'lat_ana_ms':>14}{'lat_cal_ms':>14}{'lat_ratio':>11}"
+          + f"{'energy_ratio':>14}")
+    for cal, ana in zip(calibrated, analytic):
+        cells = [f"{str(cal.get(c)):>10}" for c in hdr]
+        lr = cal["latency_ms"] / max(ana["latency_ms"], 1e-30)
+        er = cal["energy_uj"] / max(ana["energy_uj"], 1e-30)
+        print("  " + "  ".join(cells)
+              + f"{ana['latency_ms']:>14.4f}{cal['latency_ms']:>14.4f}"
+              + f"{lr:>11.3f}{er:>14.3f}")
 
 
 def _finish(result: SweepResult, args: argparse.Namespace) -> int:
@@ -148,40 +175,63 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--top-k", type=int, default=0, metavar="K",
                     help="print the top-K rows by --metric")
     ap.add_argument("--metric", default="latency_ms")
+    ap.add_argument("--profile", default=None,
+                    help="calibration profile JSON (or 'default'): run "
+                         "the sweep in calibrated mode")
+    ap.add_argument("--diff-analytic", action="store_true",
+                    help="with --profile: also run the analytic twin of "
+                         "every row and print the ratios")
     args = ap.parse_args(argv)
+
+    profile = None
+    if args.profile is not None:
+        from ..calibrate.profile import ProfileError, resolve_profile
+        try:
+            profile = resolve_profile(args.profile)
+        except ProfileError as e:
+            ap.error(str(e))
+        print(f"calibrated mode: profile {profile.name!r} "
+              f"(hash {profile.content_hash()[:12]})")
+    if args.diff_analytic and profile is None:
+        ap.error("--diff-analytic requires --profile")
 
     runner = _runner(args)
     ratios = _parse_floats(ap, args.ratios)
 
-    if args.sweep == "sparsity":
-        arch = PRESET_ARCHS[args.arch]() if args.arch else usecase_arch(4)
-        wl_fn = lambda: MODEL_BUILDERS[args.model](args.img)  # noqa: E731
-        result = sparsity_sweep(
-            arch, wl_fn, {}, ratios=ratios, runner=runner,
-            pattern_factory=lambda r: TABLE_II_PATTERNS(r, c_in=16))
-    elif args.sweep == "mapping":
-        wl_fn = lambda: MODEL_BUILDERS[args.model](args.img)  # noqa: E731
-        rearrange = [None if t == "none" else t
-                     for t in args.rearrange.split(",") if t]
-        if args.arch:
-            base = PRESET_ARCHS[args.arch]
-            arch_fn = lambda org: base().with_org(org)  # noqa: E731
-        else:
-            arch_fn = lambda org: usecase_arch(org[0] * org[1], org)  # noqa: E731
-        result = mapping_sweep(
-            arch_fn, wl_fn,
-            hybrid(2, 16, args.spec_ratio),
-            orgs=_parse_orgs(ap, args.orgs),
-            strategies=tuple(t for t in args.strategies.split(",") if t),
-            rearrange=rearrange, runner=runner)
-    else:  # lm
+    def run_sweep(prof):
+        if args.sweep == "sparsity":
+            arch = PRESET_ARCHS[args.arch]() if args.arch else usecase_arch(4)
+            wl_fn = lambda: MODEL_BUILDERS[args.model](args.img)  # noqa: E731
+            return sparsity_sweep(
+                arch, wl_fn, {}, ratios=ratios, runner=runner, profile=prof,
+                pattern_factory=lambda r: TABLE_II_PATTERNS(r, c_in=16))
+        if args.sweep == "mapping":
+            wl_fn = lambda: MODEL_BUILDERS[args.model](args.img)  # noqa: E731
+            rearrange = [None if t == "none" else t
+                         for t in args.rearrange.split(",") if t]
+            if args.arch:
+                base = PRESET_ARCHS[args.arch]
+                arch_fn = lambda org: base().with_org(org)  # noqa: E731
+            else:
+                arch_fn = lambda org: usecase_arch(org[0] * org[1], org)  # noqa: E731
+            return mapping_sweep(
+                arch_fn, wl_fn,
+                hybrid(2, 16, args.spec_ratio),
+                orgs=_parse_orgs(ap, args.orgs),
+                strategies=tuple(t for t in args.strategies.split(",") if t),
+                rearrange=rearrange, runner=runner, profile=prof)
+        # lm
         from ..configs import get_config
         cfg = get_config(args.config)
         arch = PRESET_ARCHS[args.arch]() if args.arch else usecase_arch(16)
         wl_fn = lambda: lm_workload(cfg, seq_len=args.seq_len)  # noqa: E731
-        result = sparsity_sweep(
-            arch, wl_fn, {}, ratios=ratios, runner=runner,
+        return sparsity_sweep(
+            arch, wl_fn, {}, ratios=ratios, runner=runner, profile=prof,
             pattern_factory=lambda r: TABLE_II_PATTERNS(r, c_in=16))
+
+    result = run_sweep(profile)
+    if args.diff_analytic:
+        _print_diff(result.rows, run_sweep(None).rows)
     return _finish(result, args)
 
 

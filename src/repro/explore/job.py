@@ -22,6 +22,7 @@ from typing import Dict, Optional, Tuple
 
 import numpy as np
 
+from ..calibrate.profile import CalibrationProfile
 from ..core.hardware import CIMArch
 from ..core.mapping import MappingSpec
 from ..core.workload import Workload
@@ -30,7 +31,8 @@ __all__ = ["ExploreJob", "canonical", "content_key", "CACHE_SCHEMA"]
 
 # Bump when the cost model or job serialisation changes incompatibly:
 # on-disk caches keyed under an older schema are simply never hit again.
-CACHE_SCHEMA = 1
+# 2: jobs grew a calibration-profile field (repro.calibrate).
+CACHE_SCHEMA = 2
 
 
 def canonical(obj) -> object:
@@ -46,6 +48,12 @@ def canonical(obj) -> object:
     if isinstance(obj, float):
         # repr round-trips exactly and avoids JSON float surprises
         return ["f", repr(obj)]
+    if isinstance(obj, CalibrationProfile):
+        # key by the profile's own content address (physical parameters
+        # only): two fits that agree on peaks/efficiencies are the same
+        # profile for every consumer, however their provenance/residual
+        # metadata differs — they must hit the same cache entries.
+        return ["CalibrationProfile", obj.content_hash()]
     if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
         fields = sorted(
             (f.name, canonical(getattr(obj, f.name)))
@@ -90,6 +98,10 @@ class ExploreJob:
     ``input_sparsity`` is stored as a sorted tuple of pairs (hashable);
     ``masks`` maps op name → FullBlock keep-grid from the pruning
     workflow and participates in the key via array content.
+    ``profile`` is an optional measured calibration profile
+    (:mod:`repro.calibrate`); it scales the simulator's latency terms,
+    so it is part of the job's content — analytic and calibrated
+    evaluations of the same design never share a cache entry.
     """
 
     kind: str                                   # 'simulate' | 'dense'
@@ -98,6 +110,7 @@ class ExploreJob:
     mapping: MappingSpec
     input_sparsity: Optional[Tuple[Tuple[str, float], ...]] = None
     masks: Optional[Tuple[Tuple[str, np.ndarray], ...]] = None
+    profile: Optional[CalibrationProfile] = None
 
     def __post_init__(self):
         if self.kind not in ("simulate", "dense"):
@@ -122,17 +135,19 @@ class ExploreJob:
     @staticmethod
     def simulate(arch: CIMArch, workload: Workload, mapping: MappingSpec, *,
                  input_sparsity: Optional[Dict[str, float]] = None,
-                 masks: Optional[Dict[str, np.ndarray]] = None) -> "ExploreJob":
+                 masks: Optional[Dict[str, np.ndarray]] = None,
+                 profile: Optional[CalibrationProfile] = None) -> "ExploreJob":
         return ExploreJob(
             kind="simulate", arch=arch, workload=workload, mapping=mapping,
             input_sparsity=(tuple(sorted(input_sparsity.items()))
                             if input_sparsity else None),
             masks=tuple(sorted(masks.items())) if masks else None,
+            profile=profile,
         )
 
     @staticmethod
-    def dense(arch: CIMArch, workload: Workload,
-              mapping: MappingSpec) -> "ExploreJob":
+    def dense(arch: CIMArch, workload: Workload, mapping: MappingSpec,
+              profile: Optional[CalibrationProfile] = None) -> "ExploreJob":
         """Dense-baseline job: sparsity stripped, support hardware off.
 
         Stripping happens *here* (via :func:`~repro.core.costmodel.dense_twin`,
@@ -144,4 +159,4 @@ class ExploreJob:
 
         dense_arch, dense_wl = dense_twin(arch, workload)
         return ExploreJob(kind="dense", arch=dense_arch, workload=dense_wl,
-                          mapping=mapping)
+                          mapping=mapping, profile=profile)

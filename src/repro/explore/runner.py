@@ -39,6 +39,7 @@ def evaluate_job(job: ExploreJob) -> CostReport:
         job.arch, job.workload, job.mapping,
         input_sparsity=dict(job.input_sparsity) if job.input_sparsity else None,
         masks=dict(job.masks) if job.masks else None,
+        profile=job.profile,
     )
 
 

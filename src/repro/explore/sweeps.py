@@ -19,6 +19,7 @@ import json
 from pathlib import Path
 from typing import (Callable, Dict, List, Optional, Sequence, Tuple, Union)
 
+from ..calibrate.profile import CalibrationProfile
 from ..core.costmodel import compare
 from ..core.flexblock import FlexBlockSpec
 from ..core.hardware import CIMArch
@@ -135,6 +136,7 @@ def sparsity_sweep(
     mapping: Optional[MappingSpec] = None,
     pattern_factory: Optional[Callable[[float], Dict[str, FlexBlockSpec]]] = None,
     input_sparsity: Optional[Dict[str, float]] = None,
+    profile: Optional[CalibrationProfile] = None,
     runner: Optional[SweepRunner] = None,
     workers: Optional[int] = None,
     cache: Optional[ResultCache] = None,
@@ -142,16 +144,19 @@ def sparsity_sweep(
     """§VII-B: sparsity pattern × ratio grid on one architecture.
 
     All points share one dense baseline; the engine evaluates it once.
+    ``profile`` switches the whole grid — sparse points and the shared
+    baseline alike — to calibrated mode (:mod:`repro.calibrate`).
     """
     mapping = mapping or default_mapping(arch)
-    dense = ExploreJob.dense(arch, workload_fn(), mapping)
+    dense = ExploreJob.dense(arch, workload_fn(), mapping, profile=profile)
     points: List[GridPoint] = []
     for ratio in ratios:
         pats = pattern_factory(ratio) if pattern_factory else patterns
         for name, spec in pats.items():
             wl = workload_fn().set_sparsity(spec)
             job = ExploreJob.simulate(arch, wl, mapping,
-                                      input_sparsity=input_sparsity)
+                                      input_sparsity=input_sparsity,
+                                      profile=profile)
             points.append(GridPoint(job, dense,
                                     meta=(("pattern", name), ("ratio", ratio))))
     return run_grid(points, runner=runner, workers=workers, cache=cache)
@@ -165,6 +170,7 @@ def mapping_sweep(
     orgs: Sequence[Tuple[int, int]] = ((8, 2), (4, 4), (2, 8)),
     strategies: Sequence[str] = ("spatial", "duplicate"),
     rearrange: Sequence[Optional[str]] = (None,),
+    profile: Optional[CalibrationProfile] = None,
     runner: Optional[SweepRunner] = None,
     workers: Optional[int] = None,
     cache: Optional[ResultCache] = None,
@@ -175,8 +181,8 @@ def mapping_sweep(
         arch = arch_fn(org)
         mapping = default_mapping(arch, strat, rearrange=rr)
         wl = workload_fn().set_sparsity(spec)
-        job = ExploreJob.simulate(arch, wl, mapping)
-        dense = ExploreJob.dense(arch, wl, mapping)
+        job = ExploreJob.simulate(arch, wl, mapping, profile=profile)
+        dense = ExploreJob.dense(arch, wl, mapping, profile=profile)
         points.append(GridPoint(job, dense, meta=(
             ("pattern", spec.name), ("ratio", None),
             ("org", f"{org[0]}x{org[1]}"), ("rearrange", rr or "none"))))

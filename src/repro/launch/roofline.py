@@ -12,8 +12,10 @@ terms use per-chip peaks directly).  Also reports MODEL_FLOPS = 6·N·D
 MODEL_FLOPS / (HLO_FLOPs × chips), the dominant term, and a one-line
 "what would move it" note.
 
-Hardware constants (TPU v5e-class, per assignment):
-  197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+Peaks come from a :class:`repro.calibrate.CalibrationProfile` — the
+bundled default carries the analytic TPU v5e-class numbers (197 TFLOP/s
+bf16, 819 GB/s HBM, ~50 GB/s/link ICI); ``--profile`` swaps in a fitted
+one (see ``python -m repro.calibrate``).
 """
 from __future__ import annotations
 
@@ -22,30 +24,60 @@ import json
 import sys
 from typing import Dict, List, Optional
 
-PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
-HBM_BW = 819e9               # bytes/s per chip
-ICI_BW = 50e9                # bytes/s per link per chip
+from ..calibrate.profile import (CalibrationProfile, ProfileError,
+                                 default_profile, resolve_profile)
 
-__all__ = ["analyze", "load_ledger", "main"]
+_DEFAULT_PROFILE = default_profile()
+
+# Legacy module-level constants, kept as aliases of the bundled default
+# profile so existing imports keep meaning exactly what they always did.
+PEAK_FLOPS = _DEFAULT_PROFILE.peak_flops     # bf16 FLOP/s per chip
+HBM_BW = _DEFAULT_PROFILE.hbm_bw             # bytes/s per chip
+ICI_BW = _DEFAULT_PROFILE.ici_bw             # bytes/s per link per chip
+
+__all__ = ["analyze", "load_ledger", "LedgerRecords", "main"]
 
 
-def load_ledger(path: str) -> List[Dict]:
+class LedgerRecords(list):
+    """Deduped ledger records, plus what loading had to skip.
+
+    A plain ``list`` to callers; ``skipped`` / ``skipped_lines`` report
+    undecodable lines so partial writes and corruption are visible
+    instead of silently shrinking the analysis.
+    """
+
+    def __init__(self, records, skipped_lines: List[int]):
+        super().__init__(records)
+        self.skipped_lines = skipped_lines
+
+    @property
+    def skipped(self) -> int:
+        return len(self.skipped_lines)
+
+
+def load_ledger(path: str) -> LedgerRecords:
     recs = []
+    skipped_lines: List[int] = []
     with open(path) as f:
-        for line in f:
+        for lineno, line in enumerate(f, start=1):
             line = line.strip()
             if not line:
                 continue
             try:
                 recs.append(json.loads(line))
             except json.JSONDecodeError:
-                pass
+                skipped_lines.append(lineno)
+    if skipped_lines:
+        shown = ", ".join(map(str, skipped_lines[:8]))
+        more = "" if len(skipped_lines) <= 8 else ", ..."
+        print(f"roofline: skipped {len(skipped_lines)} undecodable ledger "
+              f"line(s) in {path} (line {shown}{more})", file=sys.stderr)
     # keep the last record per (arch, cell, mesh, tag)
     dedup = {}
     for r in recs:
         dedup[(r.get("arch"), r.get("cell"), r.get("mesh"),
                r.get("tag", ""))] = r
-    return list(dedup.values())
+    return LedgerRecords(dedup.values(), skipped_lines)
 
 
 def model_flops(rec: Dict) -> float:
@@ -57,21 +89,23 @@ def model_flops(rec: Dict) -> float:
     return mult * n * tokens
 
 
-def analyze(rec: Dict) -> Optional[Dict]:
+def analyze(rec: Dict,
+            profile: Optional[CalibrationProfile] = None) -> Optional[Dict]:
     if "error" in rec:
         return None
+    prof = profile if profile is not None else _DEFAULT_PROFILE
     chips = rec["chips"]
     coll = sum(v for k, v in rec["collective_bytes"].items() if k != "count")
-    t_comp = rec["flops"] / PEAK_FLOPS
-    t_mem = rec["bytes_accessed"] / HBM_BW
-    t_coll = coll / ICI_BW
+    t_comp = rec["flops"] / prof.peak_flops
+    t_mem = rec["bytes_accessed"] / prof.hbm_bw
+    t_coll = coll / prof.ici_bw
     terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
     dom = max(terms, key=terms.get)
     mf = model_flops(rec)
     useful = mf / max(rec["flops"] * chips, 1.0)
     bound = max(terms.values())
     # roofline fraction: useful model FLOPs per chip-second at the bound
-    frac = (mf / chips / PEAK_FLOPS) / max(bound, 1e-30)
+    frac = (mf / chips / prof.peak_flops) / max(bound, 1e-30)
     hint = {
         "compute": "cut non-model FLOPs (remat policy, fused ops, "
                    "cheaper logits) or improve sharding balance",
@@ -114,13 +148,20 @@ def main(argv=None) -> int:
     ap.add_argument("--ledger", default="results/dryrun.jsonl")
     ap.add_argument("--json", action="store_true", help="emit JSON rows")
     ap.add_argument("--tag", default=None, help="filter by ledger tag")
+    ap.add_argument("--profile", default=None,
+                    help="calibration profile JSON (or 'default') "
+                         "supplying the per-chip peaks")
     args = ap.parse_args(argv)
+    try:
+        profile = resolve_profile(args.profile)
+    except ProfileError as e:
+        ap.error(str(e))
     rows = []
     errors = []
     for rec in load_ledger(args.ledger):
         if args.tag is not None and rec.get("tag", "") != args.tag:
             continue
-        a = analyze(rec)
+        a = analyze(rec, profile)
         if a is None:
             errors.append(rec)
         else:

@@ -1,0 +1,129 @@
+"""Dry-run HLO parsing against saved HLO-text fixtures, plus the full
+ledger → ``load_ledger`` → ``analyze`` round trip.  Pure text + JSON —
+no TPU/GPU (or even a working jax device) required."""
+import json
+from pathlib import Path
+
+import pytest
+
+FIXTURES = Path(__file__).parent / "fixtures"
+
+
+def _hlo(name: str) -> str:
+    return (FIXTURES / "hlo" / name).read_text()
+
+
+def test_collective_bytes_mixed_fixture():
+    from repro.launch.dryrun import collective_bytes
+
+    out = collective_bytes(_hlo("collectives_mixed.txt"))
+    # -done ops are counted at their -start; fusion over a collective-
+    # named operand is not a collective.
+    assert out["all-gather"] == 2048 * 512 * 2 + 8 * 128 * 2
+    assert out["all-reduce"] == 4096 * 4 + 1000 * 4
+    assert out["reduce-scatter"] == 512 * 128 * 4
+    assert out["all-to-all"] == 2 * 256 * 4
+    assert out["collective-permute"] == 4096 * 4
+    assert out["count"] == 7
+
+
+def test_collective_bytes_no_collectives_fixture():
+    from repro.launch.dryrun import collective_bytes
+
+    out = collective_bytes(_hlo("no_collectives.txt"))
+    assert out["count"] == 0
+    assert all(v == 0 for k, v in out.items() if k != "count")
+
+
+@pytest.mark.parametrize("sig,expected", [
+    ("bf16[8,128]{1,0}", 8 * 128 * 2),
+    ("f32[4096]{0}", 4096 * 4),
+    ("(f32[16]{0}, f32[16]{0})", 2 * 16 * 4),
+    ("(bf16[2,3]{1,0}, s32[5]{0}, pred[7]{0})", 2 * 3 * 2 + 5 * 4 + 7),
+    ("f8e4m3fn[10]{0}", 10),
+    ("pred[]", 1),
+    ("c64[4]{0}", 0),            # unknown dtype: skipped, not crashed
+    ("token[]", 0),
+    ("u64[3,3]{1,0}", 9 * 8),
+])
+def test_shape_bytes(sig, expected):
+    from repro.launch.dryrun import _shape_bytes
+
+    assert _shape_bytes(sig) == expected
+
+
+def _ledger_record(**over):
+    rec = {
+        "arch": "llama3-8b", "cell": "train_4k", "mesh": "single",
+        "tag": "", "chips": 256, "kind": "train", "seq_len": 4096,
+        "global_batch": 256, "flops": 1.97e14, "bytes_accessed": 8.19e11,
+        "collective_bytes": {"all-reduce": 5e10, "count": 3},
+        "peak_bytes": 2 ** 30, "params": 8e9, "active_params": 8e9,
+    }
+    rec.update(over)
+    return rec
+
+
+def test_ledger_load_analyze_round_trip(tmp_path, capsys):
+    """dryrun-style ledger → load_ledger → analyze, including dedup,
+    error records, and skipped-line accounting."""
+    from repro.launch.roofline import analyze, load_ledger
+
+    path = tmp_path / "dryrun.jsonl"
+    stale = _ledger_record(flops=1.0)        # superseded by the re-run
+    err = _ledger_record(cell="decode_32k", error="RuntimeError: boom")
+    with open(path, "w") as f:
+        f.write(json.dumps(stale) + "\n")
+        f.write("{definitely not json\n")
+        f.write("\n")                         # blank lines are not errors
+        f.write(json.dumps(err) + "\n")
+        f.write(json.dumps(_ledger_record()) + "\n")
+
+    recs = load_ledger(str(path))
+    assert recs.skipped == 1 and recs.skipped_lines == [2]
+    assert "skipped 1 undecodable" in capsys.readouterr().err
+    # dedup keeps the LAST record per (arch, cell, mesh, tag)
+    assert len(recs) == 2
+    by_cell = {r["cell"]: r for r in recs}
+    assert by_cell["train_4k"]["flops"] == 1.97e14
+
+    rows = [analyze(r) for r in recs]
+    good = [r for r in rows if r is not None]
+    assert len(good) == 1 and rows.count(None) == 1   # error rec → None
+    a = good[0]
+    # default profile reproduces the legacy constants bit-for-bit
+    assert a["t_compute_s"] == 1.97e14 / 197e12
+    assert a["t_memory_s"] == 8.19e11 / 819e9
+    assert a["t_collective_s"] == 5e10 / 50e9
+    assert a["dominant"] in ("compute", "memory", "collective")
+
+
+def test_analyze_with_custom_profile():
+    from repro.calibrate import CalibrationProfile
+    from repro.launch.roofline import analyze
+
+    rec = _ledger_record()
+    prof = CalibrationProfile(name="half", device="t", peak_flops=98.5e12,
+                              hbm_bw=819e9, ici_bw=50e9)
+    a0, a1 = analyze(rec), analyze(rec, prof)
+    assert a1["t_compute_s"] == pytest.approx(2 * a0["t_compute_s"])
+    assert a1["t_memory_s"] == a0["t_memory_s"]
+
+
+def test_roofline_main_with_profile_flag(tmp_path, capsys):
+    from repro.launch import roofline
+
+    ledger = tmp_path / "l.jsonl"
+    ledger.write_text(json.dumps(_ledger_record()) + "\n")
+    prof_path = tmp_path / "p.json"
+    from repro.calibrate import CalibrationProfile
+    CalibrationProfile(name="half", device="t", peak_flops=98.5e12
+                       ).save(prof_path)
+
+    assert roofline.main(["--ledger", str(ledger), "--json"]) == 0
+    rows_default = json.loads(capsys.readouterr().out)
+    assert roofline.main(["--ledger", str(ledger), "--json",
+                          "--profile", str(prof_path)]) == 0
+    rows_half = json.loads(capsys.readouterr().out)
+    assert rows_half[0]["t_compute_s"] == \
+        pytest.approx(2 * rows_default[0]["t_compute_s"])
