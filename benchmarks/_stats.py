@@ -1,0 +1,40 @@
+"""Shared engine-accounting helpers for the exploration suites."""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.core.mapping import default_tile_cache
+
+__all__ = ["tile_cache_snapshot", "engine_stats_row"]
+
+
+def tile_cache_snapshot() -> Dict[str, int]:
+    """Counter snapshot of the process-wide tile-grid memo, taken before
+    a suite runs so its stats row can report the delta."""
+    return dict(default_tile_cache().stats())
+
+
+def engine_stats_row(runner, tg0: Dict[str, int]) -> Dict:
+    """The ``engine/stats`` row both exploration suites append.
+
+    Tile-grid memo traffic is per-process, so the delta vs ``tg0`` is
+    only reported for sequential runs — with worker fan-out the hits
+    happen inside the pool and this process's counters would read a
+    misleading 0/0.
+    """
+    s = runner.stats
+    row = {
+        "name": "engine/stats",
+        "us_per_call": 0.0,
+        "requested": s.requested,
+        "unique": s.unique,
+        "cache_hits": s.cache_hits,
+        "evaluated": s.evaluated,
+        "workers": s.workers,
+        "wall_s": round(s.wall_s, 2),
+    }
+    if s.workers == 1:
+        tg = default_tile_cache().stats()
+        row["tile_grid_hits"] = tg["hits"] - tg0["hits"]
+        row["tile_grid_misses"] = tg["misses"] - tg0["misses"]
+    return row

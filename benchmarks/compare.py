@@ -1,0 +1,136 @@
+"""Perf-regression gate: diff a benchmark JSON summary against the
+committed baseline.
+
+``BENCH_baseline.json`` (repo root) is the pre-vectorization measurement
+of ``python -m benchmarks.run --json`` — the reference the tentpole
+speedup is certified against and the ceiling no commit may creep back
+toward.  CI reruns the suites on every push and fails when any suite's
+``wall_s`` regresses more than ``--max-regress`` (default 25%) over the
+baseline; the per-suite delta table prints either way so the perf
+trajectory is visible in green runs too.
+
+Usage:
+  python -m benchmarks.compare BENCH_baseline.json BENCH_run.json \
+      [--max-regress 0.25] [--min-speedup 1.0]
+
+``--min-speedup`` optionally also asserts the current total is at least
+that many times faster than the baseline total (e.g. ``--min-speedup 5``
+certifies the tentpole's acceptance bar).
+
+Exit status: 0 = within budget, 1 = regression (or speedup bar missed),
+2 = unusable inputs.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List, Optional, Tuple
+
+
+def _suite_walls(summary: Dict) -> Dict[str, float]:
+    """Per-suite best wall seconds from a ``benchmarks.run`` summary.
+
+    ``wall_s`` is already the min across ``--repeat`` runs for new
+    summaries and the single-sample wall for old ones."""
+    out = {}
+    for name, s in summary.get("suites", {}).items():
+        if s.get("ok") and isinstance(s.get("wall_s"), (int, float)):
+            out[name] = float(s["wall_s"])
+    return out
+
+
+def compare_summaries(baseline: Dict, current: Dict, *,
+                      max_regress: float = 0.25,
+                      min_speedup: Optional[float] = None,
+                      ) -> Tuple[List[str], List[Dict]]:
+    """Returns (failures, per-suite delta rows)."""
+    base = _suite_walls(baseline)
+    cur = _suite_walls(current)
+    failures: List[str] = []
+    rows: List[Dict] = []
+    for name, b in sorted(base.items()):
+        c = cur.get(name)
+        row = {"suite": name, "baseline_s": b, "current_s": c}
+        if c is None:
+            failures.append(f"suite {name!r} missing/failed in current run")
+            row["delta"] = "MISSING"
+        else:
+            delta = (c - b) / b if b > 0 else 0.0
+            row["delta"] = f"{delta:+.1%}"
+            row["speedup"] = f"{b / c:.2f}x" if c > 0 else "inf"
+            if c > b * (1.0 + max_regress):
+                failures.append(
+                    f"suite {name!r} regressed {delta:+.1%} "
+                    f"({b:.3f}s -> {c:.3f}s, budget +{max_regress:.0%})")
+        rows.append(row)
+    for name in sorted(set(cur) - set(base)):
+        rows.append({"suite": name, "baseline_s": None,
+                     "current_s": cur[name], "delta": "NEW"})
+
+    b_tot = sum(base.values())
+    c_tot = sum(cur.get(n, 0.0) for n in base if n in cur)
+    rows.append({"suite": "TOTAL", "baseline_s": round(b_tot, 3),
+                 "current_s": round(c_tot, 3),
+                 "delta": f"{(c_tot - b_tot) / b_tot:+.1%}" if b_tot else "",
+                 "speedup": f"{b_tot / c_tot:.2f}x" if c_tot else "inf"})
+    if min_speedup is not None and c_tot > 0:
+        if b_tot / c_tot < min_speedup:
+            failures.append(
+                f"total speedup {b_tot / c_tot:.2f}x below the required "
+                f"{min_speedup:g}x bar ({b_tot:.3f}s -> {c_tot:.3f}s)")
+    return failures, rows
+
+
+def _print_table(rows: List[Dict]) -> None:
+    cols = ("suite", "baseline_s", "current_s", "delta", "speedup")
+    widths = {c: max(len(c), *(len(str(r.get(c, ""))) for r in rows))
+              for c in cols}
+    line = "  ".join(c.ljust(widths[c]) for c in cols)
+    print(line)
+    print("-" * len(line))
+    for r in rows:
+        print("  ".join(str(r.get(c, "")).ljust(widths[c]) for c in cols))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline", help="committed BENCH_baseline.json")
+    ap.add_argument("current", help="fresh benchmarks.run --json output")
+    ap.add_argument("--max-regress", type=float, default=0.25,
+                    help="max tolerated per-suite slowdown vs baseline "
+                         "(fraction, default 0.25 = +25%%)")
+    ap.add_argument("--min-speedup", type=float, default=None,
+                    help="additionally require current total to be at "
+                         "least this many times faster than baseline")
+    args = ap.parse_args(argv)
+
+    try:
+        with open(args.baseline) as f:
+            baseline = json.load(f)
+        with open(args.current) as f:
+            current = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"compare: cannot load inputs: {e}", file=sys.stderr)
+        return 2
+    if not _suite_walls(baseline):
+        print("compare: baseline has no usable suite timings", file=sys.stderr)
+        return 2
+
+    failures, rows = compare_summaries(
+        baseline, current, max_regress=args.max_regress,
+        min_speedup=args.min_speedup)
+    _print_table(rows)
+    if failures:
+        print("\nPERF GATE FAILED:")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print(f"\nperf gate OK (budget: +{args.max_regress:.0%} per suite"
+          + (f", >={args.min_speedup:g}x total" if args.min_speedup else "")
+          + ")")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

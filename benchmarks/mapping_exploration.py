@@ -24,6 +24,8 @@ from repro.core import (compare, default_mapping, hybrid, resnet50,
                         usecase_arch, vgg16)
 from repro.explore import ExploreJob, SweepRunner, mapping_sweep
 
+from ._stats import engine_stats_row, tile_cache_snapshot
+
 __all__ = ["run"]
 
 ORGS = ((8, 2), (4, 4), (2, 8))
@@ -33,6 +35,7 @@ def run(workers: Optional[int] = 1) -> List[Dict]:
     rows: List[Dict] = []
     spec = hybrid(2, 16, 0.8)
     runner = SweepRunner(workers=workers)
+    tg0 = tile_cache_snapshot()
 
     # ---- Fig. 11: strategy × organisation × model --------------------------
     for mname, wl_fn in (("resnet50", lambda: resnet50(32)),
@@ -111,15 +114,5 @@ def run(workers: Optional[int] = 1) -> List[Dict]:
             "speedup": round(c["speedup"], 3),
         })
 
-    s = runner.stats
-    rows.append({
-        "name": "engine/stats",
-        "us_per_call": 0.0,
-        "requested": s.requested,
-        "unique": s.unique,
-        "cache_hits": s.cache_hits,
-        "evaluated": s.evaluated,
-        "workers": s.workers,
-        "wall_s": round(s.wall_s, 2),
-    })
+    rows.append(engine_stats_row(runner, tg0))
     return rows

@@ -7,22 +7,31 @@
 
 Usage:  PYTHONPATH=src python -m benchmarks.run [--only NAME] [--csv FILE]
                                                 [--workers N] [--json [FILE]]
+                                                [--repeat N]
 Each row prints as ``name,us_per_call,<derived...>``.
 
 ``--workers`` fans the exploration suites (sparsity / mapping) out
 across processes via the :mod:`repro.explore` engine; their
 ``engine/stats`` rows report cache-hit accounting either way.
 
+``--repeat N`` runs every suite N times and reports min/median wall
+seconds per suite (rows come from the first, cold, run) so CI perf
+comparisons against ``BENCH_baseline.json`` aren't single-sample noise.
+Note repeats share the process-wide tile-grid memo — the min is a warm
+measurement by design.
+
 ``--json`` writes a machine-readable summary (default
 ``BENCH_run.json``): per-suite wall time + row counts and every
 ``us_per_call`` row — the artifact CI archives so the perf trajectory
-across commits is a file diff, not log archaeology.
+across commits is a file diff, not log archaeology.  See
+``docs/performance.md`` for the workflow around it.
 """
 from __future__ import annotations
 
 import argparse
 import csv
 import json
+import statistics
 import time
 from typing import Dict, List
 
@@ -59,7 +68,11 @@ def main(argv=None) -> int:
     ap.add_argument("--workers", type=int, default=1,
                     help="process count for the exploration suites "
                          "(default 1 = sequential; 0 = one per CPU)")
+    ap.add_argument("--repeat", type=int, default=1, metavar="N",
+                    help="run each suite N times; report min/median wall_s "
+                         "(default 1)")
     args = ap.parse_args(argv)
+    repeat = max(1, args.repeat)
 
     all_rows: List[Dict] = []
     suites_summary: Dict[str, Dict] = {}
@@ -68,28 +81,42 @@ def main(argv=None) -> int:
     ok = True
     for name in names:
         print(f"== {name} ==", flush=True)
-        t0 = time.perf_counter()
-        try:
-            if name in PARALLEL_SUITES:
-                # 0 = one worker per CPU (SweepRunner's None default)
-                rows = SUITES[name](workers=args.workers or None)
-            else:
-                rows = SUITES[name]()
-        except Exception as e:  # noqa: BLE001 — report and continue
-            print(f"  SUITE FAILED: {type(e).__name__}: {e}", flush=True)
-            ok = False
-            suites_summary[name] = {
-                "ok": False, "wall_s": round(time.perf_counter() - t0, 3),
-                "rows": 0, "error": f"{type(e).__name__}: {e}"}
+        rows: List[Dict] = []
+        walls: List[float] = []
+        failed = False
+        for rep_i in range(repeat):
+            t0 = time.perf_counter()
+            try:
+                if name in PARALLEL_SUITES:
+                    # 0 = one worker per CPU (SweepRunner's None default)
+                    run_rows = SUITES[name](workers=args.workers or None)
+                else:
+                    run_rows = SUITES[name]()
+            except Exception as e:  # noqa: BLE001 — report and continue
+                print(f"  SUITE FAILED: {type(e).__name__}: {e}", flush=True)
+                ok = False
+                failed = True
+                suites_summary[name] = {
+                    "ok": False, "wall_s": round(time.perf_counter() - t0, 3),
+                    "rows": 0, "error": f"{type(e).__name__}: {e}"}
+                break
+            walls.append(time.perf_counter() - t0)
+            if rep_i == 0:
+                rows = run_rows          # report the first (cold) run's rows
+        if failed:
             continue
         for r in rows:
             r.setdefault("suite", name)
             print("  " + _fmt(r), flush=True)
         all_rows.extend(rows)
-        wall = time.perf_counter() - t0
-        suites_summary[name] = {"ok": True, "wall_s": round(wall, 3),
-                                "rows": len(rows)}
-        print(f"  ({len(rows)} rows, {wall:.1f}s)", flush=True)
+        suites_summary[name] = {
+            "ok": True,
+            "wall_s": round(min(walls), 3),
+            "wall_s_median": round(statistics.median(walls), 3),
+            "wall_s_runs": [round(w, 3) for w in walls],
+            "rows": len(rows)}
+        runs = "" if repeat == 1 else f", min of {repeat} runs"
+        print(f"  ({len(rows)} rows, {min(walls):.1f}s{runs})", flush=True)
 
     if args.csv and all_rows:
         keys: List[str] = []
@@ -108,6 +135,10 @@ def main(argv=None) -> int:
         summary = {
             "ok": ok,
             "total_s": round(total_s, 3),
+            # noise-resistant total: sum of per-suite best walls
+            "total_wall_s": round(sum(s.get("wall_s", 0.0)
+                                      for s in suites_summary.values()), 3),
+            "repeat": repeat,
             "workers": args.workers,
             "suites": suites_summary,
             "rows": [{"suite": r.get("suite"), "name": r.get("name"),

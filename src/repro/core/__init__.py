@@ -26,28 +26,13 @@ from .workload import (MODEL_BUILDERS, OpNode, Workload, lm_workload,
 from .presets import mars_arch, sdp_arch, usecase_arch, PRESET_ARCHS
 from .explorer import sweep_mappings, sweep_orgs, sweep_sparsity
 
-# The pruning workflow (§IV-D) and input-sparsity profiling (§IV-B) run
-# on jax; the cost model + exploration plane above is numpy-only.  Keep
-# the package importable without jax and fail with a clear message only
-# when a jax-backed function is actually called.
-try:
-    from .pruning import (block_losses, flexblock_mask, fullblock_mask,
-                          intrablock_mask, prune_matrix)
-    from .input_sparsity import (analytic_skip_ratio, profile_activations,
-                                 quantize_int8, skippable_bit_ratio)
-except ModuleNotFoundError as _e:   # pragma: no cover - jax-free installs
-    if _e.name not in ("jax", "jaxlib"):
-        raise
-
-    def _needs_jax(*_a, **_k):
-        raise ImportError(
-            "the pruning workflow / input-sparsity profiling needs jax: "
-            "install the [jax] extra (pip install -e '.[jax]')")
-
-    block_losses = flexblock_mask = fullblock_mask = _needs_jax
-    intrablock_mask = prune_matrix = _needs_jax
-    analytic_skip_ratio = profile_activations = _needs_jax
-    quantize_int8 = skippable_bit_ratio = _needs_jax
+# Mask generation (§IV-D) and input-sparsity profiling (§IV-B) are
+# numpy-native host paths (the Pallas kernels cover the device side), so
+# the whole modeling plane imports without jax.
+from .pruning import (block_losses, flexblock_mask, fullblock_mask,
+                      intrablock_mask, prune_matrix)
+from .input_sparsity import (analytic_skip_ratio, profile_activations,
+                             quantize_int8, skippable_bit_ratio)
 
 __all__ = [
     # flexblock

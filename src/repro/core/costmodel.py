@@ -29,9 +29,11 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from ..calibrate.profile import CalibrationProfile
+from . import mapping as _mapping
 from .flexblock import FlexBlockSpec
 from .hardware import CIMArch
-from .mapping import MappingSpec, reshape_and_compress
+from .mapping import (MappingSpec, TileGridCache, _band_stats_loop,
+                      reshape_and_compress)
 from .report import CostReport, OpCost
 from .workload import OpNode, Workload
 
@@ -82,6 +84,36 @@ def _pipeline(steps: List[_Step], overlap: bool) -> float:
     return float(lat)
 
 
+_ACC, _READ, _WRITE = 0, 1, 2
+
+
+class _OpLedger:
+    """Per-op access-event buffer (same recording interface as
+    :class:`_Accounting`).
+
+    Per-op costing appends events here and :meth:`_Accounting.commit`
+    absorbs them in one pass, so the shared ledger dicts see O(1) traffic
+    per op instead of one guarded dict lookup per recording call.  Events
+    apply in recorded order — float accumulation order (and therefore the
+    energy breakdown) is bit-identical to calling the accounting methods
+    directly.
+    """
+
+    __slots__ = ("events",)
+
+    def __init__(self):
+        self.events: List[tuple] = []
+
+    def acc(self, unit: str, n: float) -> None:
+        self.events.append((_ACC, unit, n))
+
+    def read(self, mem: str, bits: float) -> None:
+        self.events.append((_READ, mem, bits))
+
+    def write(self, mem: str, bits: float) -> None:
+        self.events.append((_WRITE, mem, bits))
+
+
 class _Accounting:
     """Access-count ledger across all units."""
 
@@ -102,6 +134,23 @@ class _Accounting:
     def write(self, mem: str, bits: float) -> None:
         if mem in self.mem_wr and bits > 0:
             self.mem_wr[mem] += bits / self.arch.mem(mem).width_bits
+
+    def commit(self, ledger: _OpLedger) -> None:
+        """Absorb one op's buffered events in a single pass."""
+        comp, rd, wr = self.compute_acc, self.mem_rd, self.mem_wr
+        mems = self.arch.memory_units
+        for kind, unit, val in ledger.events:
+            if val <= 0:
+                continue
+            if kind == _ACC:
+                if unit in comp:
+                    comp[unit] += val
+            elif kind == _READ:
+                if unit in rd:
+                    rd[unit] += val / mems[unit].width_bits
+            else:
+                if unit in wr:
+                    wr[unit] += val / mems[unit].width_bits
 
     def energy_breakdown(self, latency_cycles: float) -> Dict[str, float]:
         """Eq. 4–7, in pJ."""
@@ -143,10 +192,11 @@ def _mvm_op_cost(
     op: OpNode,
     arch: CIMArch,
     mapping: MappingSpec,
-    acct: _Accounting,
+    acct: _OpLedger,
     *,
     input_skip_ratio: float = 0.0,
     block_keep: Optional[np.ndarray] = None,
+    tile_cache: Optional[TileGridCache] = None,
 ) -> OpCost:
     """Cost one MVM op with a *band-packing* schedule.
 
@@ -165,7 +215,7 @@ def _mvm_op_cost(
     """
     macro = arch.macro
     grid = reshape_and_compress(op, arch, mapping.reshape,
-                                block_keep=block_keep)
+                                block_keep=block_keep, cache=tile_cache)
     n_macros = arch.n_macros
     org_r, org_c = arch.org
     bands_per_macro = macro.rows // macro.sub_rows
@@ -186,20 +236,17 @@ def _mvm_op_cost(
     tile_n = grid.tile_n
     nt = max(1, math.ceil(grid.n_eff / tile_n))
     k_cols = grid.k_eff if len(grid.k_eff) else np.array([grid.K])
-    tile_bands = []
-    tile_rows = []
-    for j in range(nt):
-        cols = k_cols[j * tile_n:(j + 1) * tile_n]
-        k_max = int(cols.max()) if len(cols) else 0
-        if k_max <= 0:
-            continue
-        tile_bands.append(math.ceil(k_max / macro.sub_rows))
-        tile_rows.append(float(cols.sum()) / max(len(cols), 1))
-    B = max(1, int(sum(tile_bands)))          # total band demand
-    rows_used = float(sum(r for r in tile_rows))  # mean real rows per tile col
-    ragged = any(
-        len(set(int(c) for c in k_cols[j * tile_n:(j + 1) * tile_n])) > 1
-        for j in range(nt))
+    if _mapping._REFERENCE:
+        bands_sum, n_band_tiles, row_demand, ragged = _band_stats_loop(
+            grid.k_eff, grid.K, tile_n, macro.sub_rows)
+    else:
+        bands_sum, n_band_tiles, row_demand, ragged = grid.band_stats(
+            macro.sub_rows)
+    B = max(1, bands_sum)                     # total band demand
+    # row_demand = Σ over N-tiles of the tile's mean real rows per column:
+    # a tile's columns share its band rows, so the per-column mean is that
+    # tile's real array-row footprint and the sum is the op's total real
+    # row demand — the numerator of row-granular utilisation below.
 
     # ---- schedule -------------------------------------------------------------
     # spatial:   all macros hold distinct bands; no duplication.
@@ -254,7 +301,7 @@ def _mvm_op_cost(
     band_vec_cycles = float(B) * subs_per_band * V * comp_cycles_per_vec
     acct.acc("cim_array", band_vec_cycles)
     acct.acc("adder_tree", float(B) * V * comp_cycles_per_vec)
-    acct.acc("shift_add", float(len(tile_bands) or 1) * V)
+    acct.acc("shift_add", float(n_band_tiles or 1) * V)
     # cross-wave / cross-macro partial-sum accumulation
     k_span = max(1, math.ceil((int(k_cols.max()) if len(k_cols) else grid.K)
                               / macro.rows))
@@ -297,14 +344,14 @@ def _mvm_op_cost(
 
     # utilisation: real weight rows (× replicas) over provisioned capacity
     provisioned = waves * (n_macros * bands_per_macro) * macro.sub_rows
-    util = min(1.0, rows_used * dup / max(provisioned, 1))
+    util = min(1.0, row_demand * dup / max(provisioned, 1))
     return OpCost(name=op.name, kind=op.kind, latency_cycles=lat,
-                  macs=op.macs, tiles=len(tile_bands) or 1, waves=waves,
+                  macs=op.macs, tiles=n_band_tiles or 1, waves=waves,
                   utilization=util, index_bits=idx_bits,
                   occupancy=grid.mean_occupancy)
 
 
-def _other_op_cost(op: OpNode, arch: CIMArch, acct: _Accounting) -> OpCost:
+def _other_op_cost(op: OpNode, arch: CIMArch, acct: _OpLedger) -> OpCost:
     """Non-MVM ops (pool / act / add / norm / embed) run on post_proc."""
     post = arch.unit("post_proc")
     n = max(op.elements, 1)
@@ -327,6 +374,7 @@ def simulate(
     input_sparsity: Optional[Dict[str, float]] = None,
     masks: Optional[Dict[str, np.ndarray]] = None,
     profile: Optional[CalibrationProfile] = None,
+    tile_cache: Optional[TileGridCache] = None,
 ) -> CostReport:
     """Run the CIMinus cost simulation.
 
@@ -343,6 +391,10 @@ def simulate(
     Dynamic energy is access-count-based and therefore unchanged.
     ``profile=None`` (and any profile with all-1.0 efficiencies, like
     the bundled default) reproduces the analytic model bit-for-bit.
+    ``tile_cache`` overrides the process-wide
+    :class:`~repro.core.mapping.TileGridCache` the tiling hot path
+    memoises into (``None`` = share the module default, which is what
+    sweep workers rely on to warm once per process).
     """
     arch.validate()
     acct = _Accounting(arch)
@@ -350,16 +402,19 @@ def simulate(
     scoped = {o.name for o in workload.mvm_ops(arch.eval_scope)}
 
     for op in workload.nodes.values():
+        led = _OpLedger()
         if (op.is_mvm or op.kind == "dwconv") and op.name in scoped:
-            oc = _mvm_op_cost(op, arch, mapping, acct,
+            oc = _mvm_op_cost(op, arch, mapping, led,
                               input_skip_ratio=(input_sparsity or {}).get(op.name, 0.0),
-                              block_keep=(masks or {}).get(op.name))
+                              block_keep=(masks or {}).get(op.name),
+                              tile_cache=tile_cache)
         elif arch.eval_scope == "conv_only":
             # Table I: MARS evaluates conv layers only — everything else
             # is outside the measured scope entirely.
             continue
         else:
-            oc = _other_op_cost(op, arch, acct)
+            oc = _other_op_cost(op, arch, led)
+        acct.commit(led)
         if profile is not None:
             eff = profile.efficiency_for(op_class(op))
             if eff != 1.0:

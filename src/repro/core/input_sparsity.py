@@ -14,16 +14,15 @@ before simulation:
    length.
 
 The bit-plane reduction is the :mod:`repro.kernels.bitserial` Pallas
-kernel's job on TPU; a jnp oracle backs it on CPU.
+kernel's job on TPU; this module is the host-side (numpy) profiling
+path — small reductions where eager jax dispatch cost used to dominate
+the benchmark wall clock.  jax arrays are accepted and pulled to host.
 """
 from __future__ import annotations
 
 from typing import Callable, Dict, List, Optional
 
 import numpy as np
-
-import jax
-import jax.numpy as jnp
 
 __all__ = [
     "quantize_int8",
@@ -33,19 +32,18 @@ __all__ = [
 ]
 
 
-def quantize_int8(x: jnp.ndarray, *, per_tensor_scale: Optional[float] = None
-                  ) -> jnp.ndarray:
+def quantize_int8(x, *, per_tensor_scale: Optional[float] = None
+                  ) -> np.ndarray:
     """Symmetric int8 quantisation (round-to-nearest, saturating)."""
-    x = jnp.asarray(x)
+    x = np.asarray(x)
     scale = per_tensor_scale
     if scale is None:
-        scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-8) / 127.0
-    q = jnp.clip(jnp.round(x / scale), -128, 127).astype(jnp.int8)
+        scale = max(float(np.max(np.abs(x))), 1e-8) / 127.0
+    q = np.clip(np.round(x / scale), -128, 127).astype(np.int8)
     return q
 
 
-def skippable_bit_ratio(q: jnp.ndarray, group_rows: int, n_bits: int = 8
-                        ) -> float:
+def skippable_bit_ratio(q, group_rows: int, n_bits: int = 8) -> float:
     """Fraction of (group × bit) slots whose bit plane is all-zero.
 
     ``q`` is an int8 activation tensor reshaped to (n_vectors, K): each
@@ -53,21 +51,21 @@ def skippable_bit_ratio(q: jnp.ndarray, group_rows: int, n_bits: int = 8
     ``group_rows`` (the array's broadcast span).  Sign-magnitude bit
     planes are used, matching bit-serial digital CIM datapaths.
     """
-    q = jnp.asarray(q)
+    q = np.asarray(q)
     if q.ndim == 1:
         q = q[None, :]
-    mag = jnp.abs(q.astype(jnp.int32))
+    mag = np.abs(q.astype(np.int32))
     V, K = mag.shape
     pad = (-K) % group_rows
     if pad:
-        mag = jnp.pad(mag, ((0, 0), (0, pad)))
+        mag = np.pad(mag, ((0, 0), (0, pad)))
     G = mag.shape[1] // group_rows
-    grouped = mag.reshape(V, G, group_rows)
+    # OR of each broadcast group's magnitudes: bit b's plane is all-zero
+    # within a group iff bit b of the group-OR is zero
+    group_or = np.bitwise_or.reduce(mag.reshape(V, G, group_rows), axis=-1)
     planes_skippable = 0
     for b in range(n_bits):
-        plane = (grouped >> b) & 1
-        group_or = plane.max(axis=-1)          # OR across the broadcast group
-        planes_skippable += int(jnp.sum(group_or == 0))
+        planes_skippable += int(np.sum(((group_or >> b) & 1) == 0))
     total = V * G * n_bits
     return float(planes_skippable) / max(total, 1)
 
@@ -80,7 +78,7 @@ def profile_activations(
     """Per-layer skippable-bit ratios from captured activation samples."""
     out = {}
     for name, a in acts.items():
-        q = quantize_int8(jnp.asarray(a).reshape(-1, a.shape[-1]))
+        q = quantize_int8(np.asarray(a).reshape(-1, a.shape[-1]))
         out[name] = skippable_bit_ratio(q, group_rows, n_bits)
     return out
 

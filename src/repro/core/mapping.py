@@ -13,13 +13,26 @@ Two halves:
   organisation dimension).  Spatially mapped weight loops *unroll* the
   matrix across macros; feature loops *duplicate* weights so macros chew
   different input vectors in parallel (§VII-C's two strategies).
+
+Performance note (Fig. 7): :func:`reshape_and_compress` is the analytic
+hot path — every simulated MVM op tiles through it.  The occupancy and
+band reductions are vectorised (``np.add.reduceat`` over the compressed
+column profile) and the resulting :class:`TileGrid` is memoised in a
+content-addressed :class:`TileGridCache`, so repeated layer shapes — the
+common case in CNN stages and transformer stacks, and across every grid
+point of a sweep — pay for one grid computation.  The scalar loop
+implementations are retained (``_occupancy_loop`` / ``_band_stats_loop``)
+as the reference the equivalence tests replay via
+:func:`reference_loops`; vectorised results are bit-for-bit identical.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import hashlib
 import math
-from typing import List, Optional, Tuple
+from collections import OrderedDict
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -28,7 +41,8 @@ from .hardware import CIMArch
 from .workload import OpNode
 
 __all__ = [
-    "ReshapeSpec", "Loop", "MappingSpec", "TileGrid", "reshape_and_compress",
+    "ReshapeSpec", "Loop", "MappingSpec", "TileGrid", "TileGridCache",
+    "reshape_and_compress", "reference_loops", "default_tile_cache",
     "spatial_mapping", "duplicate_mapping", "default_mapping",
 ]
 
@@ -87,6 +101,9 @@ class TileGrid:
     energy.  ``row_lengths[nt]`` = compressed K extent per column tile
     (ragged when FullBlock pruning removes different row counts per
     column group).
+
+    Instances may come out of a shared :class:`TileGridCache` — treat
+    them (and their arrays) as immutable.
     """
 
     K: int                      # original contraction extent
@@ -113,6 +130,264 @@ class TileGrid:
             return 0.0
         return float(self.occupancy.mean())
 
+    def band_stats(self, sub_rows: int) -> Tuple[int, int, float, bool]:
+        """Per-N-tile band accounting for the cost model (memoised).
+
+        Returns ``(bands_sum, n_tiles, row_demand, ragged)`` — see
+        :func:`_band_stats_vectorized`.  The result depends only on the
+        grid's column profile and ``sub_rows``, so it is computed once
+        per (grid, sub_rows) pair however many ops share the grid.
+        """
+        memo = self.__dict__.setdefault("_band_stats_memo", {})
+        hit = memo.get(sub_rows)
+        if hit is None:
+            hit = _band_stats_vectorized(self.k_eff, self.K, self.tile_n,
+                                         sub_rows)
+            memo[sub_rows] = hit
+        return hit
+
+
+# ---------------------------------------------------------------------------
+# Reference (scalar-loop) ↔ vectorized implementations of the hot path.
+#
+# The loop variants are the original per-tile formulation and are kept as
+# the ground truth for the equivalence tests; `reference_loops()` routes
+# the whole simulator through them (and past every cache).
+# ---------------------------------------------------------------------------
+
+_REFERENCE = False
+
+
+@contextlib.contextmanager
+def reference_loops():
+    """Route the cost-model hot path through the retained scalar-loop
+    reference implementations, bypassing every memo/cache.  Test-only —
+    results must be bit-for-bit identical to the vectorized default."""
+    global _REFERENCE
+    prev = _REFERENCE
+    _REFERENCE = True
+    try:
+        yield
+    finally:
+        _REFERENCE = prev
+
+
+def _tile_counts(k_cols: np.ndarray, k_base: int,
+                 tile_k: int, tile_n: int) -> Tuple[int, int]:
+    kt = max(1, math.ceil((int(k_cols.max()) if k_cols.size else k_base)
+                          / tile_k))
+    nt = max(1, math.ceil(len(k_cols) / tile_n))
+    return kt, nt
+
+
+def _occupancy_loop(k_cols: np.ndarray, k_base: int,
+                    tile_k: int, tile_n: int) -> np.ndarray:
+    """Reference: per-(kt, nt) tile occupancy via the original loop."""
+    kt, nt = _tile_counts(k_cols, k_base, tile_k, tile_n)
+    occ = np.zeros((kt, nt))
+    for j in range(nt):
+        cols = k_cols[j * tile_n:(j + 1) * tile_n]
+        width_frac = len(cols) / tile_n
+        for i in range(kt):
+            lo, hi = i * tile_k, (i + 1) * tile_k
+            rows = np.clip(cols - lo, 0, tile_k)
+            if len(cols):
+                occ[i, j] = float(rows.mean()) / tile_k * width_frac
+    return occ
+
+
+def _occupancy_vectorized(k_cols: np.ndarray, k_base: int,
+                          tile_k: int, tile_n: int) -> np.ndarray:
+    """Vectorized occupancy: clip the whole column profile against every
+    K-tile at once, then segment-sum per N-tile with ``np.add.reduceat``.
+
+    Column counts are integers, so the segment sums are exact and the
+    final float expression replays the loop's association order —
+    ``(mean / tile_k) * width_frac`` — making the result bit-identical
+    to :func:`_occupancy_loop`.
+    """
+    kt, nt = _tile_counts(k_cols, k_base, tile_k, tile_n)
+    if not k_cols.size:
+        return np.zeros((kt, nt))
+    n = len(k_cols)
+    starts = np.arange(nt) * tile_n
+    lo = np.arange(kt, dtype=np.int64) * tile_k
+    rows = np.clip(k_cols[None, :].astype(np.int64, copy=False)
+                   - lo[:, None], 0, tile_k)
+    sums = np.add.reduceat(rows, starts, axis=1)          # (kt, nt) exact
+    lens = np.diff(np.append(starts, n))                  # per-tile widths
+    return (sums / lens / tile_k) * (lens / tile_n)
+
+
+def _band_stats_loop(k_cols: np.ndarray, K: int, tile_n: int,
+                     sub_rows: int) -> Tuple[int, int, float, bool]:
+    """Reference: the original per-N-tile band-demand loop.
+
+    Returns ``(bands_sum, n_tiles, row_demand, ragged)`` where
+    ``bands_sum`` is the total band demand Σ ceil(k_max / sub_rows) over
+    non-empty tiles, ``n_tiles`` the count of non-empty tiles,
+    ``row_demand`` the Σ over tiles of the tile's mean real rows per
+    column (the op's total real array-row demand — each tile's columns
+    share band rows, so the per-column mean is that tile's row
+    footprint), and ``ragged`` whether any tile mixes column lengths.
+    """
+    kc = k_cols if len(k_cols) else np.array([K])
+    nt = max(1, math.ceil(len(k_cols) / tile_n))
+    tile_bands: List[int] = []
+    tile_rows: List[float] = []
+    for j in range(nt):
+        cols = kc[j * tile_n:(j + 1) * tile_n]
+        k_max = int(cols.max()) if len(cols) else 0
+        if k_max <= 0:
+            continue
+        tile_bands.append(math.ceil(k_max / sub_rows))
+        tile_rows.append(float(cols.sum()) / max(len(cols), 1))
+    ragged = any(
+        len(set(int(c) for c in kc[j * tile_n:(j + 1) * tile_n])) > 1
+        for j in range(nt))
+    return (int(sum(tile_bands)), len(tile_bands),
+            float(sum(r for r in tile_rows)), ragged)
+
+
+def _band_stats_vectorized(k_cols: np.ndarray, K: int, tile_n: int,
+                           sub_rows: int) -> Tuple[int, int, float, bool]:
+    """Vectorized band accounting via segmented reduceat reductions.
+
+    Bit-for-bit contract with :func:`_band_stats_loop`: segment sums /
+    maxima are exact integer reductions; ``row_demand`` replays the
+    loop's left-to-right Python float summation so no pairwise-summation
+    reassociation can creep in.
+    """
+    kc = k_cols if len(k_cols) else np.array([K])
+    nt = max(1, math.ceil(len(k_cols) / tile_n))
+    n = len(kc)
+    starts = np.arange(nt) * tile_n
+    maxs = np.maximum.reduceat(kc, starts)
+    mins = np.minimum.reduceat(kc, starts)
+    sums = np.add.reduceat(kc.astype(np.int64, copy=False), starts)
+    lens = np.diff(np.append(starts, n))
+    sel = maxs > 0
+    bands = -(-maxs[sel].astype(np.int64) // sub_rows)    # exact int ceil
+    tile_rows = sums[sel] / np.maximum(lens[sel], 1)
+    # left-to-right like the reference's Python sum (not np pairwise)
+    row_demand = float(sum(tile_rows.tolist()))
+    return (int(bands.sum()), int(sel.sum()), row_demand,
+            bool(np.any(mins != maxs)))
+
+
+# ---------------------------------------------------------------------------
+# Content-addressed memoisation: synthesised keep-grids + tile grids.
+# ---------------------------------------------------------------------------
+
+class TileGridCache:
+    """LRU cache of :class:`TileGrid` results keyed by content.
+
+    Key: ``(K, N, bound sparsity spec, reshape, tile, sub-array dims,
+    mask identity)`` — everything :func:`reshape_and_compress` reads.
+    Synthesised keep-grids are themselves content-addressed (seeded by
+    shape + pattern), so the sentinel ``('synth',)`` suffices for them;
+    externally supplied masks key by a blake2b digest of their bytes.
+
+    One module-level instance (:func:`default_tile_cache`) serves a whole
+    process: sequential sweeps share it across jobs and each ProcessPool
+    worker of :class:`repro.explore.runner.SweepRunner` warms its own
+    copy once.
+    """
+
+    def __init__(self, capacity: int = 4096):
+        self.capacity = capacity
+        self._d: "OrderedDict[tuple, TileGrid]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def get(self, key: tuple) -> Optional[TileGrid]:
+        grid = self._d.get(key)
+        if grid is None:
+            self.misses += 1
+            return None
+        self._d.move_to_end(key)
+        self.hits += 1
+        return grid
+
+    def put(self, key: tuple, grid: TileGrid) -> None:
+        if self.capacity <= 0:
+            return
+        self._d[key] = grid
+        self._d.move_to_end(key)
+        while len(self._d) > self.capacity:
+            self._d.popitem(last=False)
+            self.evictions += 1
+
+    def resize(self, capacity: int) -> None:
+        """Change the entry budget in place, evicting LRU overflow —
+        keeps warm entries and the stats object identity intact."""
+        self.capacity = capacity
+        if capacity <= 0:
+            self._d.clear()
+            return
+        while len(self._d) > capacity:
+            self._d.popitem(last=False)
+            self.evictions += 1
+
+    def clear(self) -> None:
+        self._d.clear()
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+    def stats(self) -> Dict[str, int]:
+        return {"hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions, "size": len(self._d),
+                "capacity": self.capacity}
+
+
+_DEFAULT_TILE_CACHE = TileGridCache()
+# synthesised keep-grids are tiny relative to their permutation cost;
+# bounded separately so huge row-wise grids can't evict tile grids
+_KEEP_GRID_CACHE: "OrderedDict[tuple, np.ndarray]" = OrderedDict()
+_KEEP_GRID_CAPACITY = 2048
+
+
+def default_tile_cache() -> TileGridCache:
+    """The process-wide :class:`TileGridCache` ``simulate()`` uses unless
+    handed an explicit one."""
+    return _DEFAULT_TILE_CACHE
+
+
+def set_default_tile_cache(cache: TileGridCache) -> TileGridCache:
+    """Swap the process-wide tile cache (e.g. to resize it in explore
+    workers); returns the previous one."""
+    global _DEFAULT_TILE_CACHE
+    prev = _DEFAULT_TILE_CACHE
+    _DEFAULT_TILE_CACHE = cache
+    return prev
+
+
+def _synth_keep_grid(seed_src: str, gm: int, gn: int,
+                     n_keep: int) -> np.ndarray:
+    """blake2b-seeded random keep-grid with exactly ``n_keep`` survivors,
+    memoised on its full content address (the permutation dominates the
+    synthesis cost for large grids)."""
+    key = (seed_src, gm, gn, n_keep)
+    if not _REFERENCE:
+        hit = _KEEP_GRID_CACHE.get(key)
+        if hit is not None:
+            _KEEP_GRID_CACHE.move_to_end(key)
+            return hit
+    seed = int.from_bytes(
+        hashlib.blake2b(seed_src.encode(), digest_size=4).digest(), "little")
+    rng = np.random.default_rng(seed)
+    keep = np.zeros(gm * gn, dtype=bool)
+    keep[rng.permutation(gm * gn)[:n_keep]] = True
+    keep = keep.reshape(gm, gn)
+    keep.setflags(write=False)                 # cached: treat as immutable
+    if not _REFERENCE:
+        _KEEP_GRID_CACHE[key] = keep
+        while len(_KEEP_GRID_CACHE) > _KEEP_GRID_CAPACITY:
+            _KEEP_GRID_CACHE.popitem(last=False)
+    return keep
+
 
 def _block_keep_grid(op: OpNode, spec: FlexBlockSpec) -> Optional[np.ndarray]:
     """Deterministic pseudo-random block keep-grid for costing.
@@ -122,6 +397,13 @@ def _block_keep_grid(op: OpNode, spec: FlexBlockSpec) -> Optional[np.ndarray]:
     passes them in; otherwise we synthesise a seeded random grid with the
     exact block keep-count Φ — the paper's auto-generated randomised
     sparsity mask path (§IV-C).
+
+    The seed is content-addressed by the matrix shape and the bound
+    pattern (NOT the op name): Python's ``hash()`` is salted per process
+    — which would make parallel sweep workers disagree with sequential
+    runs — and same-shape ops repeat dozens of times per workload, so
+    one synthesised grid (and the tile grid derived from it) serves all
+    of them.
     """
     full = spec.full
     if full is None:
@@ -130,15 +412,19 @@ def _block_keep_grid(op: OpNode, spec: FlexBlockSpec) -> Optional[np.ndarray]:
     f = full.bind(shape)
     gm, gn = f.grid(shape)
     n_keep = f.nonzero_blocks(shape)
-    # content-stable seed: Python's hash() is salted per process, which
-    # would make parallel sweep workers disagree with sequential runs
-    seed_src = f"{op.name}|{f.m}|{f.n}|{round(f.ratio, 6)}"
-    seed = int.from_bytes(
-        hashlib.blake2b(seed_src.encode(), digest_size=4).digest(), "little")
-    rng = np.random.default_rng(seed)
-    keep = np.zeros(gm * gn, dtype=bool)
-    keep[rng.permutation(gm * gn)[:n_keep]] = True
-    return keep.reshape(gm, gn)
+    seed_src = f"{op.K}x{op.N}|{f.m}|{f.n}|{round(f.ratio, 6)}"
+    return _synth_keep_grid(seed_src, gm, gn, n_keep)
+
+
+def _mask_identity(block_keep: Optional[np.ndarray],
+                   spec: FlexBlockSpec) -> Optional[tuple]:
+    if block_keep is not None:
+        arr = np.ascontiguousarray(block_keep)
+        digest = hashlib.blake2b(arr.tobytes(), digest_size=16).hexdigest()
+        return ("mask", str(arr.dtype), arr.shape, digest)
+    if spec.full is not None:
+        return ("synth",)      # fully determined by (K, N, bound spec)
+    return None
 
 
 def reshape_and_compress(
@@ -147,11 +433,29 @@ def reshape_and_compress(
     reshape: ReshapeSpec,
     *,
     block_keep: Optional[np.ndarray] = None,
+    cache: Optional[TileGridCache] = None,
 ) -> TileGrid:
     """① Data reshaping: compress the op's K×N weight view per its
-    FlexBlock spec, align to the tile size, optionally rearrange."""
+    FlexBlock spec, align to the tile size, optionally rearrange.
+
+    Memoised in ``cache`` (default: the process-wide
+    :func:`default_tile_cache`): the returned :class:`TileGrid` may be
+    shared between ops/calls — callers must not mutate it.
+    """
     spec = op.sparsity.bind((op.K, op.N))
     tile_k, tile_n = reshape.tile or (arch.macro.rows, arch.macro.cols)
+
+    key = None
+    if not _REFERENCE:
+        if cache is None:
+            cache = _DEFAULT_TILE_CACHE
+        key = (op.K, op.N, spec, reshape, tile_k, tile_n,
+               arch.macro.sub_rows, arch.macro.sub_cols,
+               _mask_identity(block_keep, spec))
+        hit = cache.get(key)
+        if hit is not None:
+            return hit
+
     intra = spec.intra
     full = spec.full
 
@@ -188,7 +492,6 @@ def reshape_and_compress(
             rows_per_block = f.m if intra is None else max(1, round(f.m * intra.phi / intra.m))
             k_per_bcol = keep.sum(axis=0) * rows_per_block          # (gn,)
             # expand block columns to element columns
-            n_groups = gn
             col_width = f.n if f.n > 0 else op.N
             # ragged: element-columns in group j have k_per_bcol[j] rows
             k_cols = np.repeat(k_per_bcol, col_width)[: op.N]
@@ -218,20 +521,18 @@ def reshape_and_compress(
 
     # --- tiling -------------------------------------------------------------
     n_eff = len(k_cols)
-    kt = max(1, math.ceil((int(k_cols.max()) if k_cols.size else k_base) / tile_k))
-    nt = max(1, math.ceil(n_eff / tile_n))
-    occ = np.zeros((kt, nt))
-    for j in range(nt):
-        cols = k_cols[j * tile_n:(j + 1) * tile_n]
-        width_frac = len(cols) / tile_n
-        for i in range(kt):
-            lo, hi = i * tile_k, (i + 1) * tile_k
-            rows = np.clip(cols - lo, 0, tile_k)
-            if len(cols):
-                occ[i, j] = float(rows.mean()) / tile_k * width_frac
-    return TileGrid(K=op.K, N=op.N, k_eff=k_cols, n_eff=n_eff,
+    if _REFERENCE:
+        occ = _occupancy_loop(k_cols, k_base, tile_k, tile_n)
+    else:
+        occ = _occupancy_vectorized(k_cols, k_base, tile_k, tile_n)
+    k_cols.setflags(write=False)
+    occ.setflags(write=False)
+    grid = TileGrid(K=op.K, N=op.N, k_eff=k_cols, n_eff=n_eff,
                     tile_k=tile_k, tile_n=tile_n, occupancy=occ,
                     intra_fanin=intra_fanin, misaligned=misaligned)
+    if key is not None:
+        cache.put(key, grid)
+    return grid
 
 
 def spatial_mapping(arch: CIMArch, *, rearrange: Optional[str] = None,

@@ -10,18 +10,20 @@ Generates FlexBlock-conformant binary masks for 2-D weight matrices:
 
 Criteria ρ: ``l1`` (|w|) and ``l2`` (w²) as in the paper.
 
-All mask generation is pure-functional on numpy/jax arrays; the heavy
-block-loss reduction can be routed through the Pallas
-``block_importance`` kernel (see :mod:`repro.kernels.ops`).
+All mask generation is pure-functional and runs on **numpy** — the
+reductions are tiny next to model weights, eager jax dispatch used to
+dominate benchmark wall time with op-by-op compiles, and mask consumers
+(the cost model, the compression helpers) want host arrays anyway.  jax
+arrays are accepted (pulled to host) and jax is only imported when a
+mask is *applied* to a device array.  The heavy block-loss reduction can
+still be routed through the Pallas ``block_importance`` kernel (see
+:mod:`repro.kernels.ops`).
 """
 from __future__ import annotations
 
 from typing import Callable, Dict, Optional, Tuple
 
 import numpy as np
-
-import jax
-import jax.numpy as jnp
 
 from .flexblock import FlexBlockSpec, FullBlock, IntraBlock
 
@@ -36,35 +38,35 @@ __all__ = [
 ]
 
 CRITERIA: Dict[str, Callable] = {
-    "l1": lambda w: jnp.abs(w),
-    "l2": lambda w: jnp.square(w),
+    "l1": lambda w: np.abs(w),
+    "l2": lambda w: np.square(w),
 }
 
 
-def _pad_to_blocks(w: jnp.ndarray, m: int, n: int) -> jnp.ndarray:
+def _pad_to_blocks(w: np.ndarray, m: int, n: int) -> np.ndarray:
     M, N = w.shape
     pm = (-M) % m
     pn = (-N) % n
     if pm or pn:
-        w = jnp.pad(w, ((0, pm), (0, pn)))
+        w = np.pad(w, ((0, pm), (0, pn)))
     return w
 
 
-def block_losses(w: jnp.ndarray, m: int, n: int, criterion: str = "l1") -> jnp.ndarray:
+def block_losses(w, m: int, n: int, criterion: str = "l1") -> np.ndarray:
     """Eq. 1: per-block aggregated importance, shape (M/m, N/n).
 
     The matrix is zero-padded up to a whole number of blocks; padding
     contributes zero loss so it never protects a block from pruning.
     """
     rho = CRITERIA[criterion]
-    wp = _pad_to_blocks(jnp.asarray(w), m, n)
+    wp = _pad_to_blocks(np.asarray(w), m, n)
     Mp, Np = wp.shape
     blocks = rho(wp).reshape(Mp // m, m, Np // n, n)
     return blocks.sum(axis=(1, 3))
 
 
 def fullblock_mask(
-    w: jnp.ndarray,
+    w,
     pattern: FullBlock,
     criterion: str = "l1",
     *,
@@ -76,6 +78,7 @@ def fullblock_mask(
     (already fully zero from a prior pattern) are treated as pruned for
     free and do not consume the pruning budget.
     """
+    w = np.asarray(w)
     p = pattern.bind(w.shape)
     losses = np.asarray(block_losses(w, p.m, p.n, criterion))
     gm, gn = losses.shape
@@ -95,7 +98,7 @@ def fullblock_mask(
 
 
 def intrablock_mask(
-    w: jnp.ndarray,
+    w,
     pattern: IntraBlock,
     criterion: str = "l1",
     *,
@@ -116,7 +119,7 @@ def intrablock_mask(
     """
     m, n = pattern.m, pattern.n
     rho = CRITERIA[criterion]
-    wp = _pad_to_blocks(jnp.asarray(w), m, n)
+    wp = _pad_to_blocks(np.asarray(w), m, n)
     Mp, Np = wp.shape
     imp = np.asarray(rho(wp)).reshape(Mp // m, m, Np // n, n)
     # (gm, gn, m*n) per-block element importances
@@ -153,11 +156,15 @@ class PruningResult:
         self.density = density
 
     def apply(self, w):
+        if isinstance(w, np.ndarray):
+            return w * self.mask.astype(w.dtype)
+        import jax.numpy as jnp   # device arrays: mask moves to the weight
+
         return w * jnp.asarray(self.mask, dtype=w.dtype)
 
 
 def flexblock_mask(
-    w: jnp.ndarray, spec: FlexBlockSpec, criterion: str = "l1",
+    w, spec: FlexBlockSpec, criterion: str = "l1",
     *, align_cols: bool = False,
 ) -> np.ndarray:
     """Compose the spec's patterns into a single keep-mask.
@@ -166,6 +173,7 @@ def flexblock_mask(
     then IntraBlock within the surviving region — matching the §IV-D
     workflow where block-level pruning precedes element-level pruning.
     """
+    w = np.asarray(w)
     spec = spec.bind(w.shape)
     spec.validate_for(w.shape)
     if spec.is_dense:
@@ -175,24 +183,25 @@ def flexblock_mask(
     if full is not None:
         mask &= fullblock_mask(w, full, criterion)
     if intra is not None:
-        w_eff = np.asarray(w) * mask
-        mask &= intrablock_mask(jnp.asarray(w_eff), intra, criterion,
+        w_eff = w * mask
+        mask &= intrablock_mask(w_eff, intra, criterion,
                                 align_cols=align_cols)
     return mask
 
 
 def prune_matrix(
-    w: jnp.ndarray, spec: FlexBlockSpec, criterion: str = "l1",
+    w, spec: FlexBlockSpec, criterion: str = "l1",
     *, align_cols: bool = False,
 ) -> PruningResult:
+    w = np.asarray(w)
     mask = flexblock_mask(w, spec, criterion, align_cols=align_cols)
     spec_b = spec.bind(w.shape)
     block_keep = None
     if spec_b.full is not None:
         f = spec_b.full
         gm, gn = f.grid(w.shape)
-        mp = _pad_to_blocks(jnp.asarray(mask), f.m, f.n)
-        bk = np.asarray(mp).reshape(gm, f.m, gn, f.n).sum(axis=(1, 3)) > 0
+        mp = _pad_to_blocks(mask, f.m, f.n)
+        bk = mp.reshape(gm, f.m, gn, f.n).sum(axis=(1, 3)) > 0
         block_keep = bk
     density = float(mask.mean())
     return PruningResult(mask, spec_b, block_keep, density)

@@ -16,8 +16,10 @@ model changes shape.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import hashlib
 import json
+from collections import OrderedDict
 from typing import Dict, Optional, Tuple
 
 import numpy as np
@@ -32,7 +34,29 @@ __all__ = ["ExploreJob", "canonical", "content_key", "CACHE_SCHEMA"]
 # Bump when the cost model or job serialisation changes incompatibly:
 # on-disk caches keyed under an older schema are simply never hit again.
 # 2: jobs grew a calibration-profile field (repro.calibrate).
-CACHE_SCHEMA = 2
+# 3: synthesised keep-grid seeds became shape-addressed (shared across
+#    same-shape ops), changing simulated results for FullBlock patterns.
+CACHE_SCHEMA = 3
+
+
+@functools.lru_cache(maxsize=None)
+def _sorted_field_names(cls) -> Tuple[str, ...]:
+    """Field names of a dataclass type, sorted once per class.
+
+    Field names are unique, so sorting names alone reproduces the
+    original ``sorted((name, value), ...)`` pair order exactly without
+    re-canonicalising values for every comparison."""
+    return tuple(sorted(f.name for f in dataclasses.fields(cls)))
+
+
+# Canonical forms of *hashable* immutable values (frozen dataclasses:
+# specs, mapping/reshape descriptions, hardware units) recur across every
+# job of a sweep — memoise them.  Keyed by (type, value) so equal values
+# of different classes never collide; bounded FIFO so mask-sized oddities
+# can't grow without bound.  Forms are plain JSON-able structures built
+# once, so sharing them across jobs cannot change any key.
+_CANON_MEMO: "OrderedDict[tuple, object]" = OrderedDict()
+_CANON_MEMO_CAPACITY = 4096
 
 
 def canonical(obj) -> object:
@@ -55,11 +79,25 @@ def canonical(obj) -> object:
         # metadata differs — they must hit the same cache entries.
         return ["CalibrationProfile", obj.content_hash()]
     if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
-        fields = sorted(
-            (f.name, canonical(getattr(obj, f.name)))
-            for f in dataclasses.fields(obj)
-        )
-        return [type(obj).__name__, fields]
+        memo_key = None
+        # never hash an ExploreJob here: its __hash__ routes through
+        # content_key → canonical and would recurse
+        if not isinstance(obj, ExploreJob):
+            try:
+                memo_key = (type(obj), obj)
+                hit = _CANON_MEMO.get(memo_key)
+                if hit is not None:
+                    return hit
+            except TypeError:                   # unhashable (mutable) field
+                memo_key = None
+        form = [type(obj).__name__,
+                [(name, canonical(getattr(obj, name)))
+                 for name in _sorted_field_names(type(obj))]]
+        if memo_key is not None:
+            _CANON_MEMO[memo_key] = form
+            while len(_CANON_MEMO) > _CANON_MEMO_CAPACITY:
+                _CANON_MEMO.popitem(last=False)
+        return form
     if isinstance(obj, np.ndarray):
         # digest raw bytes: mask-sized arrays would be prohibitively slow
         # to serialise element-wise, and keying only needs content equality

@@ -16,6 +16,14 @@ Determinism note: the cost model synthesises sparsity masks from
 content-stable seeds (see ``repro.core.mapping._block_keep_grid``), so a
 job evaluates to bit-identical results in any process — parallel runs
 match sequential runs row for row.
+
+Below the job-level result cache sits the tile-grid memo
+(:class:`repro.core.mapping.TileGridCache`): a process-wide cache of
+reshape+compress+tile results that distinct jobs share whenever they
+tile the same layer shapes.  It is per-process state — the sequential
+path warms the parent's, and each ProcessPool worker warms its own copy
+once (the runner's ``tile_cache_capacity`` is pushed into workers via
+the pool initializer).
 """
 from __future__ import annotations
 
@@ -25,6 +33,7 @@ import time
 from concurrent.futures import ProcessPoolExecutor
 from typing import Dict, List, Optional, Sequence, Union
 
+from ..core import mapping as _mapping
 from ..core.costmodel import simulate
 from ..core.report import CostReport
 from .cache import ResultCache
@@ -43,6 +52,14 @@ def evaluate_job(job: ExploreJob) -> CostReport:
     )
 
 
+def _init_worker(tile_cache_capacity: Optional[int]) -> None:
+    """ProcessPool initializer: size the worker's process-wide tile-grid
+    cache before any job lands, so every worker warms it exactly once."""
+    if tile_cache_capacity is not None:
+        _mapping.set_default_tile_cache(
+            _mapping.TileGridCache(tile_cache_capacity))
+
+
 @dataclasses.dataclass
 class RunStats:
     """Accounting for one :meth:`SweepRunner.run` call."""
@@ -54,6 +71,10 @@ class RunStats:
     evaluated: int = 0          # simulator calls actually made
     workers: int = 1
     wall_s: float = 0.0
+    # tile-grid memo traffic during evaluation (sequential path only —
+    # parallel evaluations hit the caches inside worker processes)
+    tile_grid_hits: int = 0
+    tile_grid_misses: int = 0
 
     @property
     def cache_hits(self) -> int:
@@ -74,6 +95,8 @@ class RunStats:
             evaluated=self.evaluated + other.evaluated,
             workers=max(self.workers, other.workers),
             wall_s=self.wall_s + other.wall_s,
+            tile_grid_hits=self.tile_grid_hits + other.tile_grid_hits,
+            tile_grid_misses=self.tile_grid_misses + other.tile_grid_misses,
         )
 
 
@@ -91,12 +114,24 @@ class SweepRunner:
     row-equivalence tests).
     ``cache``: a shared :class:`ResultCache`; default is a fresh
     in-memory cache scoped to this runner.
+    ``tile_cache_capacity``: entry budget for the per-process tile-grid
+    memo (:mod:`repro.core.mapping`); applied to this process and pushed
+    into every worker via the pool initializer.  ``None`` keeps whatever
+    capacity each process already has.
     """
 
     def __init__(self, *, workers: Optional[int] = None,
-                 cache: Optional[ResultCache] = None):
+                 cache: Optional[ResultCache] = None,
+                 tile_cache_capacity: Optional[int] = None):
         self.workers = _resolve_workers(workers)
         self.cache = cache if cache is not None else ResultCache()
+        self.tile_cache_capacity = tile_cache_capacity
+        if tile_cache_capacity is not None:
+            # resize in place — replacing the process-wide cache would
+            # throw away warm entries and break stats deltas other code
+            # holds against the current object; workers (fresh processes
+            # with nothing warm) get a new right-sized cache instead.
+            _mapping.default_tile_cache().resize(tile_cache_capacity)
         self.stats = RunStats()          # cumulative across run() calls
         self._pool: Optional[ProcessPoolExecutor] = None
         self._seen_keys: set = set()     # distinct keys across the lifetime
@@ -105,7 +140,9 @@ class SweepRunner:
         # pool spin-up costs ~0.5s on small containers: amortise it
         # across every run() call of the runner's lifetime
         if self._pool is None:
-            self._pool = ProcessPoolExecutor(max_workers=self.workers)
+            self._pool = ProcessPoolExecutor(
+                max_workers=self.workers, initializer=_init_worker,
+                initargs=(self.tile_cache_capacity,))
         return self._pool
 
     def close(self) -> None:
@@ -148,6 +185,8 @@ class SweepRunner:
         stats.memory_hits = self.cache.stats.memory_hits - mem0
         stats.disk_hits = self.cache.stats.disk_hits - disk0
 
+        tg = _mapping.default_tile_cache()
+        tg_h0, tg_m0 = tg.hits, tg.misses
         if pending:
             if self.workers > 1 and len(pending) > 1:
                 pool = self._get_pool()
@@ -162,6 +201,8 @@ class SweepRunner:
             for job in pending:
                 self.cache.put(job.key, results[job.key])
         stats.evaluated = len(pending)
+        stats.tile_grid_hits = tg.hits - tg_h0
+        stats.tile_grid_misses = tg.misses - tg_m0
 
         stats.wall_s = time.perf_counter() - t0
         self._seen_keys.update(unique)

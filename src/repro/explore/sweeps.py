@@ -103,9 +103,15 @@ def _row(arch: CIMArch, wl: Workload, spec_name: str, ratio, mapping: str,
 def run_grid(points: Sequence[GridPoint], *,
              runner: Optional[SweepRunner] = None,
              workers: Optional[int] = None,
-             cache: Optional[ResultCache] = None) -> SweepResult:
-    """Evaluate a grid and assemble rows in point order."""
-    runner = runner or SweepRunner(workers=workers, cache=cache)
+             cache: Optional[ResultCache] = None,
+             tile_cache_capacity: Optional[int] = None) -> SweepResult:
+    """Evaluate a grid and assemble rows in point order.
+
+    ``tile_cache_capacity`` sizes the per-process tile-grid memo the
+    simulator shares across grid points (ignored when ``runner`` is
+    supplied — the runner already owns that setting)."""
+    runner = runner or SweepRunner(workers=workers, cache=cache,
+                                   tile_cache_capacity=tile_cache_capacity)
     jobs: List[ExploreJob] = []
     for p in points:
         jobs.append(p.job)
@@ -140,6 +146,7 @@ def sparsity_sweep(
     runner: Optional[SweepRunner] = None,
     workers: Optional[int] = None,
     cache: Optional[ResultCache] = None,
+    tile_cache_capacity: Optional[int] = None,
 ) -> SweepResult:
     """§VII-B: sparsity pattern × ratio grid on one architecture.
 
@@ -159,7 +166,8 @@ def sparsity_sweep(
                                       profile=profile)
             points.append(GridPoint(job, dense,
                                     meta=(("pattern", name), ("ratio", ratio))))
-    return run_grid(points, runner=runner, workers=workers, cache=cache)
+    return run_grid(points, runner=runner, workers=workers, cache=cache,
+                    tile_cache_capacity=tile_cache_capacity)
 
 
 def mapping_sweep(
@@ -174,6 +182,7 @@ def mapping_sweep(
     runner: Optional[SweepRunner] = None,
     workers: Optional[int] = None,
     cache: Optional[ResultCache] = None,
+    tile_cache_capacity: Optional[int] = None,
 ) -> SweepResult:
     """§VII-C: mapping strategy × macro organisation (× rearrangement)."""
     points: List[GridPoint] = []
@@ -186,7 +195,8 @@ def mapping_sweep(
         points.append(GridPoint(job, dense, meta=(
             ("pattern", spec.name), ("ratio", None),
             ("org", f"{org[0]}x{org[1]}"), ("rearrange", rr or "none"))))
-    return run_grid(points, runner=runner, workers=workers, cache=cache)
+    return run_grid(points, runner=runner, workers=workers, cache=cache,
+                    tile_cache_capacity=tile_cache_capacity)
 
 
 def org_sweep(

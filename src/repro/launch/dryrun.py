@@ -14,12 +14,23 @@ mesh, compiles it, and records:
 * ``compiled.cost_analysis()``    — HLO FLOPs / bytes for §Roofline;
 * collective bytes by op kind     — parsed from the optimized HLO.
 
+With ``--execute N`` the compiled cell is additionally *run* N times on
+zero-filled sharded inputs (donated buffers are re-fed from the step's
+own outputs) and the best wall-clock lands in the record as ``time_s``
+— turning the characterisation ledger into calibration samples that
+``python -m repro.calibrate collect/fit`` harvests as ``step:<kind>``
+op classes, so production-scale runs feed the roofline fit, not just
+microbenchmarks and fixtures.  Execution allocates the cell's real
+footprint; keep it for hardware runs.
+
 Results append to a JSONL ledger (``--out``), one record per cell, so an
 interrupted matrix run resumes where it stopped (``--skip-done``).
 
 Usage:
   python -m repro.launch.dryrun --arch llama3-8b --cell train_4k
   python -m repro.launch.dryrun --all --mesh both --out results/dryrun.jsonl
+  python -m repro.launch.dryrun --arch llama3-8b --cell train_4k \
+      --execute 5 --tag calib
 """
 import argparse
 import functools
@@ -229,10 +240,67 @@ def _cost_of(compiled) -> Tuple[float, float, Dict[str, int]]:
             float(cost.get("bytes accessed", 0.0)), coll)
 
 
+def _timed_execute(compiled, args, *, repeats: int = 3,
+                   refeed: Tuple[Tuple[int, int], ...] = (),
+                   block=None, clock=time.perf_counter) -> Dict[str, float]:
+    """Run ``compiled(*args)`` ``repeats`` times and report wall seconds.
+
+    ``refeed`` maps output positions back onto donated argument slots
+    (``(arg_idx, out_idx)``) — donated buffers are invalidated by the
+    call, so repeats re-feed the step's own outputs (params/opt for
+    train, the KV cache for decode), which is also what a real training
+    loop does.  One extra warmup call absorbs transfer/dispatch warmup
+    and is excluded from the stats.
+    """
+    if block is None:
+        block = jax.block_until_ready
+    args = list(args)
+    times = []
+    for _ in range(max(1, repeats) + 1):
+        t0 = clock()
+        out = compiled(*args)
+        block(out)
+        times.append(clock() - t0)
+        for arg_idx, out_idx in refeed:
+            args[arg_idx] = out[out_idx]
+    timed = times[1:]
+    timed_sorted = sorted(timed)
+    mid = len(timed_sorted) // 2
+    median = (timed_sorted[mid] if len(timed_sorted) % 2
+              else 0.5 * (timed_sorted[mid - 1] + timed_sorted[mid]))
+    return {"time_s": min(timed), "time_s_median": median,
+            "execute_repeats": len(timed)}
+
+
+# donated arg slot <- output position, per cell kind (train donates
+# params+opt and returns them first; decode donates and returns the cache)
+_REFEED = {"train": ((0, 0), (1, 1)), "prefill": (), "decode": ((2, 1),)}
+
+
+def _zeros_like_structs(structs, shardings):
+    """Materialise zero-filled device arrays for a struct tree, placed on
+    the compiled executable's input shardings."""
+    flat, treedef = jax.tree.flatten(structs)
+    flat_sh = list(shardings)
+    if len(flat_sh) != len(flat):       # some jax versions return a pytree
+        flat_sh = jax.tree.flatten(shardings)[0]
+    out = []
+    for s, sh in zip(flat, flat_sh):
+        out.append(jax.device_put(jnp.zeros(s.shape, s.dtype), sh))
+    return jax.tree.unflatten(treedef, out)
+
+
+def _execute_cell(compiled, structs, kind: str, repeats: int) -> Dict[str, float]:
+    """Execute a compiled cell on zero inputs; returns timing fields."""
+    args = _zeros_like_structs(structs, compiled.input_shardings[0])
+    return _timed_execute(compiled, args, repeats=repeats,
+                          refeed=_REFEED.get(kind, ()))
+
+
 def run_cell(arch: str, cell_name: str, mesh_kind: str, *,
              remat: bool = True, microbatches: int = 1,
              extra_tag: str = "", remat_policy: str = "minimal",
-             ffn_compress: float = 0.0) -> Dict[str, Any]:
+             ffn_compress: float = 0.0, execute: int = 0) -> Dict[str, Any]:
     """Lower+compile one cell, plus the L=1/L=2 unrolled variants used to
     extrapolate exact per-layer FLOPs / bytes / collective traffic (XLA
     cost analysis counts a rolled scan body once, so the full-L program's
@@ -267,6 +335,20 @@ def run_cell(arch: str, cell_name: str, mesh_kind: str, *,
     t_compile = time.time() - t0
     mem = compiled.memory_analysis()
     flops_raw, bytes_raw, coll_raw = _cost_of(compiled)
+
+    # --- optional real execution: wall-clock for the calibration loop ------
+    timing: Dict[str, float] = {}
+    if execute > 0:
+        params_t = param_struct(cfg)
+        specs = input_specs(cfg, cell)
+        if cell.kind == "train":
+            opt_t = jax.eval_shape(adamw_init, params_t)
+            structs = (params_t, opt_t, specs["batch"])
+        elif cell.kind == "prefill":
+            structs = (params_t, specs)
+        else:
+            structs = (params_t, specs["tokens"], specs["cache"])
+        timing = _execute_cell(compiled, structs, cell.kind, execute)
 
     # --- per-layer extrapolation via unrolled L=1 / L=2 variants -----------
     from ..models import layers as _ly
@@ -318,6 +400,9 @@ def run_cell(arch: str, cell_name: str, mesh_kind: str, *,
         "lower_s": round(t_lower, 2),
         "compile_s": round(t_compile, 2),
     }
+    if timing:
+        rec["executed"] = True
+        rec.update(timing)      # time_s / time_s_median / execute_repeats
     return rec
 
 
@@ -331,6 +416,11 @@ def main(argv=None) -> int:
     ap.add_argument("--out", default="results/dryrun.jsonl")
     ap.add_argument("--skip-done", action="store_true")
     ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--execute", type=int, default=0, metavar="N",
+                    help="additionally RUN each compiled cell N times on "
+                         "zero inputs and record best wall-clock as "
+                         "time_s (allocates the real footprint; feeds "
+                         "repro.calibrate)")
     ap.add_argument("--tag", default="")
     # sharding-strategy knobs (§Perf hillclimb)
     ap.add_argument("--fsdp", action="store_true",
@@ -404,11 +494,13 @@ def main(argv=None) -> int:
         try:
             rec = run_cell(arch, cell_name, mk, remat=not args.no_remat,
                            extra_tag=args.tag, remat_policy=args.remat_policy,
-                           ffn_compress=args.ffn_compress)
+                           ffn_compress=args.ffn_compress,
+                           execute=args.execute)
+            timed = (f" time={rec['time_s']:.3f}s" if "time_s" in rec else "")
             print(f"    flops={rec['flops']:.3e} bytes={rec['bytes_accessed']:.3e} "
                   f"coll={sum(v for k, v in rec['collective_bytes'].items() if k != 'count'):.3e} "
                   f"peak/device={rec['peak_bytes']/2**30:.2f} GiB "
-                  f"compile={rec['compile_s']}s", flush=True)
+                  f"compile={rec['compile_s']}s{timed}", flush=True)
         except Exception as e:  # noqa: BLE001 — ledger records failures
             rec = {"arch": arch, "cell": cell_name, "mesh": mk,
                    "tag": args.tag, "error": f"{type(e).__name__}: {e}"}

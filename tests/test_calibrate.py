@@ -109,11 +109,27 @@ def test_record_to_sample_both_formats():
 
 def test_from_ledger_fixture_accounting():
     rep = from_ledger(FIXTURE_LEDGER)
-    assert len(rep.samples) == 18
+    assert len(rep.samples) == 21
     assert rep.skipped_untimed == 1       # characterisation-only record
     assert rep.skipped_malformed == 1     # truncated JSON line
     classes = {s.op_class for s in rep.samples}
-    assert {"matmul", "attention", "step:train"} <= classes
+    # executed dry-run cells (dryrun --execute) land as step:<kind>
+    assert {"matmul", "attention",
+            "step:train", "step:prefill", "step:decode"} <= classes
+
+
+def test_executed_dryrun_cells_harvest_with_time_s():
+    """`dryrun --execute` records (executed: true, time_s) harvest into
+    per-kind step samples, preferring the measured time_s field."""
+    rep = from_ledger(FIXTURE_LEDGER)
+    executed = [s for s in rep.samples
+                if dict(s.meta).get("tag") == "exec"]
+    assert len(executed) == 3
+    by_class = {s.op_class: s for s in executed}
+    assert by_class["step:train"].time_s == 3.8812
+    assert by_class["step:prefill"].time_s == 2.4106
+    assert by_class["step:decode"].time_s == 3.2095
+    assert all(s.flops > 0 and s.bytes > 0 for s in executed)
 
 
 def test_write_samples_round_trip(tmp_path):

@@ -129,3 +129,41 @@ def test_tiny_lower_on_local_mesh():
         lowered = jax.jit(step).lower(params, opt, batch)
     compiled = lowered.compile()
     assert compiled.cost_analysis() is not None
+
+
+def test_timed_execute_refeeds_donated_args():
+    """`dryrun --execute` timing helper: donated args are re-fed from the
+    step's outputs between repeats, warmup is excluded from the stats."""
+    from repro.launch.dryrun import _timed_execute
+
+    calls = []
+
+    def fake_compiled(params, opt, batch):
+        calls.append((params, opt, batch))
+        return (params + 1, opt + 10, {"loss": 0.0})
+
+    out = _timed_execute(fake_compiled, [0, 0, "batch"], repeats=3,
+                         refeed=((0, 0), (1, 1)), block=lambda o: None)
+    assert out["execute_repeats"] == 3
+    assert out["time_s"] > 0.0
+    assert out["time_s_median"] >= out["time_s"]
+    # warmup + 3 timed calls; params/opt chain through the outputs
+    assert [(c[0], c[1]) for c in calls] == [(0, 0), (1, 10), (2, 20), (3, 30)]
+    assert all(c[2] == "batch" for c in calls)   # non-donated arg untouched
+
+
+def test_timed_execute_zeros_materialisation_local():
+    """_zeros_like_structs + _timed_execute against a real compiled fn on
+    the local device — the --execute path minus the 512-device mesh."""
+    from repro.launch.dryrun import _timed_execute, _zeros_like_structs
+
+    def f(x, y):
+        return (x @ y, x.sum())
+
+    structs = (jax.ShapeDtypeStruct((8, 8), jnp.float32),
+               jax.ShapeDtypeStruct((8, 8), jnp.float32))
+    compiled = jax.jit(f).lower(*structs).compile()
+    args = _zeros_like_structs(structs, compiled.input_shardings[0])
+    assert args[0].shape == (8, 8)
+    out = _timed_execute(compiled, args, repeats=2)
+    assert out["execute_repeats"] == 2 and out["time_s"] > 0.0

@@ -1,0 +1,263 @@
+"""Vectorized-hot-path equivalence + tile-grid memoisation tests.
+
+The cost model's per-tile loops were rewritten as vectorized
+``np.add.reduceat`` reductions with a content-addressed ``TileGrid``
+memo (see ``repro.core.mapping``).  The scalar-loop reference
+implementations are retained and replayed here via
+``mapping.reference_loops()``: every simulated ``CostReport`` —
+latency, the full energy breakdown, utilisation, index bits, per-op
+costs — must be **bit-for-bit identical** between the two paths, across
+sparsity patterns × rearrangement × mapping strategies, on ragged,
+IntraBlock, and rearranged grids alike.
+"""
+import numpy as np
+import pytest
+
+from _hypothesis_shim import given, settings, st
+
+from repro.core import (TABLE_II_PATTERNS, OpNode, Workload, default_mapping,
+                        hybrid, resnet18, row_block, row_wise, simulate,
+                        usecase_arch)
+from repro.core import mapping as M
+from repro.core.flexblock import column_wise
+from repro.core.mapping import (TileGridCache, _band_stats_loop,
+                                _band_stats_vectorized, _occupancy_loop,
+                                _occupancy_vectorized, reshape_and_compress)
+
+
+@pytest.fixture(scope="module")
+def arch4():
+    return usecase_arch(4)
+
+
+def _assert_reports_identical(ref, vec, ctx):
+    assert ref.latency_cycles == vec.latency_cycles, ctx
+    assert ref.latency_ms == vec.latency_ms, ctx
+    assert ref.energy_pj == vec.energy_pj, ctx          # exact, per unit
+    assert ref.total_energy_uj == vec.total_energy_uj, ctx
+    assert ref.utilization == vec.utilization, ctx
+    assert ref.index_storage_bits == vec.index_storage_bits, ctx
+    assert len(ref.op_costs) == len(vec.op_costs), ctx
+    for a, b in zip(ref.op_costs, vec.op_costs):
+        assert a == b, (ctx, a.name)
+    assert ref == vec, ctx
+
+
+# ---------------------------------------------------------------------------
+# Full-simulation equivalence: the tentpole acceptance check.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec_name,spec", [
+    ("row-wise", row_wise(0.8)),                  # ragged FullBlock(1,N)
+    ("row-block", row_block(0.8, 16)),            # ragged FullBlock(1,16)
+    ("column-wise", column_wise(0.7)),            # col-orient compression
+    ("hybrid-1:2", hybrid(2, 16, 0.8)),           # IntraBlock + FullBlock
+    ("dense", None),
+])
+@pytest.mark.parametrize("strategy", ["spatial", "duplicate"])
+@pytest.mark.parametrize("rearrange", [None, "slice", "pad"])
+def test_loop_and_vectorized_costreports_identical(arch4, spec_name, spec,
+                                                   strategy, rearrange):
+    m = default_mapping(arch4, strategy, rearrange=rearrange,
+                        slice_size=32 if rearrange == "slice" else 0)
+
+    def wl():
+        w = resnet18(32)
+        return w.set_sparsity(spec) if spec is not None else w
+
+    with M.reference_loops():
+        ref = simulate(arch4, wl(), m)
+    vec = simulate(arch4, wl(), m)
+    _assert_reports_identical(ref, vec, (spec_name, strategy, rearrange))
+
+
+def test_equivalence_with_input_sparsity_and_masks(arch4):
+    arch = arch4.replace(input_sparsity_support=True)
+    wl_fn = lambda: resnet18(32).set_sparsity(row_block(0.75, 16))  # noqa: E731
+    m = default_mapping(arch, "duplicate")
+    skip = {op.name: 0.3 for op in wl_fn().mvm_ops()}
+    # explicit pruning-workflow mask for one op exercises the mask-digest
+    # cache key path
+    op = wl_fn().mvm_ops()[0]
+    f = row_block(0.75, 16).bind((op.K, op.N)).full
+    gm, gn = f.grid((op.K, op.N))
+    rng = np.random.default_rng(7)
+    keep = rng.random((gm, gn)) < 0.4
+    keep[0, :] = True
+    masks = {op.name: keep}
+    with M.reference_loops():
+        ref = simulate(arch, wl_fn(), m, input_sparsity=skip, masks=masks)
+    vec = simulate(arch, wl_fn(), m, input_sparsity=skip, masks=masks)
+    _assert_reports_identical(ref, vec, "input-sparsity+masks")
+
+
+# ---------------------------------------------------------------------------
+# Property tests: vectorized reductions == loop reference on random
+# ragged profiles (hypothesis when installed, via the repo shim).
+# ---------------------------------------------------------------------------
+
+def _random_profile(rng, n, lo=0, hi=200):
+    return rng.integers(lo, hi, size=n).astype(np.int64)
+
+
+@given(seed=st.integers(min_value=0, max_value=2 ** 31 - 1),
+       n=st.integers(min_value=0, max_value=300),
+       tile_k=st.sampled_from([8, 32, 64, 1024]),
+       tile_n=st.sampled_from([4, 16, 32]))
+@settings(max_examples=60, deadline=None)
+def test_occupancy_property_random_ragged(seed, n, tile_k, tile_n):
+    rng = np.random.default_rng(seed)
+    k_cols = _random_profile(rng, n)
+    k_base = int(rng.integers(1, 256))
+    loop = _occupancy_loop(k_cols, k_base, tile_k, tile_n)
+    vec = _occupancy_vectorized(k_cols, k_base, tile_k, tile_n)
+    assert loop.shape == vec.shape
+    assert np.array_equal(loop, vec)      # bit-identical, not allclose
+
+
+@given(seed=st.integers(min_value=0, max_value=2 ** 31 - 1),
+       n=st.integers(min_value=0, max_value=300),
+       tile_n=st.sampled_from([4, 16, 32]),
+       sub_rows=st.sampled_from([1, 8, 32]))
+@settings(max_examples=60, deadline=None)
+def test_band_stats_property_random_ragged(seed, n, tile_n, sub_rows):
+    rng = np.random.default_rng(seed)
+    k_cols = _random_profile(rng, n)
+    K = int(rng.integers(1, 512))
+    loop = _band_stats_loop(k_cols, K, tile_n, sub_rows)
+    vec = _band_stats_vectorized(k_cols, K, tile_n, sub_rows)
+    assert loop == vec                    # (bands, tiles, row_demand, ragged)
+
+
+def test_occupancy_and_band_stats_edge_profiles():
+    """Deterministic edge cases the random sweep may miss."""
+    cases = [
+        np.array([], dtype=np.int64),            # empty profile
+        np.zeros(40, dtype=np.int64),            # all-zero columns
+        np.array([5], dtype=np.int64),           # single column
+        np.full(64, 17, dtype=np.int64),         # uniform (not ragged)
+        np.array([0, 0, 9, 0], dtype=np.int64),  # zero tiles mixed in
+    ]
+    for k_cols in cases:
+        assert np.array_equal(_occupancy_loop(k_cols, 3, 32, 16),
+                              _occupancy_vectorized(k_cols, 3, 32, 16))
+        assert _band_stats_loop(k_cols, 7, 16, 8) == \
+            _band_stats_vectorized(k_cols, 7, 16, 8)
+
+
+# ---------------------------------------------------------------------------
+# Utilisation regression pin (the `rows_used` → `row_demand` satellite).
+# ---------------------------------------------------------------------------
+
+def test_utilization_pinned_for_known_ragged_grid(arch4):
+    """Hand-computed utilisation for an explicit ragged keep-grid.
+
+    row_demand is the Σ over N-tiles of the tile's mean real rows per
+    column (NOT a global mean): tile0 holds column groups of 40 and 10
+    rows → mean 25; tile1 holds 20 and 30 → mean 25; total demand 50
+    rows.  Spatial mapping, 1 wave, no duplication: provisioned rows =
+    4 macros × 32 bands × 32 sub_rows = 4096, so utilisation must be
+    exactly 50/4096.
+    """
+    wl = Workload("pin")
+    wl.add(OpNode(name="fc", kind="fc", K=64, N=64, V=1,
+                  sparsity=row_block(0.5, 16)))
+    keep = np.zeros((64, 4), dtype=bool)     # FullBlock(1,16) grid on 64×64
+    keep[:40, 0] = True
+    keep[:10, 1] = True
+    keep[:20, 2] = True
+    keep[:30, 3] = True
+    rep = simulate(arch4, wl, default_mapping(arch4, "spatial"),
+                   masks={"fc": keep})
+    assert rep.op_costs[0].utilization == 50.0 / 4096.0
+    assert rep.op_costs[0].tiles == 2
+    # the same grid through the reference loop agrees
+    with M.reference_loops():
+        ref = simulate(arch4, wl, default_mapping(arch4, "spatial"),
+                       masks={"fc": keep})
+    assert ref.op_costs[0].utilization == rep.op_costs[0].utilization
+
+
+# ---------------------------------------------------------------------------
+# TileGrid memoisation semantics.
+# ---------------------------------------------------------------------------
+
+def _op(name, K, N, spec):
+    return OpNode(name=name, kind="fc", K=K, N=N, V=4, sparsity=spec)
+
+
+def test_tile_grid_shared_across_same_shape_ops(arch4):
+    """Same (K, N, spec, tile): one grid computation serves every op —
+    repeated layer shapes are the transformer/CNN common case."""
+    cache = TileGridCache()
+    spec = row_block(0.8, 16)
+    m = default_mapping(arch4).reshape
+    g1 = reshape_and_compress(_op("a", 256, 128, spec), arch4, m, cache=cache)
+    g2 = reshape_and_compress(_op("b", 256, 128, spec), arch4, m, cache=cache)
+    assert g1 is g2                       # the memoised instance itself
+    assert cache.stats()["hits"] == 1 and cache.stats()["misses"] == 1
+
+
+def test_tile_grid_cache_distinguishes_content(arch4):
+    cache = TileGridCache()
+    m = default_mapping(arch4).reshape
+    spec = row_block(0.8, 16)
+    base = reshape_and_compress(_op("a", 256, 128, spec), arch4, m, cache=cache)
+    for other in (_op("b", 256, 256, spec),              # shape differs
+                  _op("c", 256, 128, row_block(0.7, 16)),  # ratio differs
+                  _op("d", 256, 128, row_wise(0.8))):    # pattern differs
+        g = reshape_and_compress(other, arch4, m, cache=cache)
+        assert g is not base
+    assert cache.stats()["misses"] == 4 and cache.stats()["hits"] == 0
+
+
+def test_tile_grid_cache_mask_digest_key(arch4):
+    """Supplied pruning masks key by content: equal-content arrays hit,
+    different content misses."""
+    cache = TileGridCache()
+    m = default_mapping(arch4).reshape
+    spec = row_block(0.5, 16)
+    rng = np.random.default_rng(0)
+    keep = rng.random((64, 8)) < 0.5
+    op = _op("a", 64, 128, spec)
+    g1 = reshape_and_compress(op, arch4, m, block_keep=keep, cache=cache)
+    g2 = reshape_and_compress(op, arch4, m, block_keep=keep.copy(),
+                              cache=cache)
+    assert g1 is g2
+    other = keep.copy()
+    other[0, 0] = not other[0, 0]
+    g3 = reshape_and_compress(op, arch4, m, block_keep=other, cache=cache)
+    assert g3 is not g1
+
+
+def test_tile_grid_cache_lru_eviction(arch4):
+    cache = TileGridCache(capacity=2)
+    m = default_mapping(arch4).reshape
+    spec = row_block(0.8, 16)
+    for i, n in enumerate((64, 128, 192)):
+        reshape_and_compress(_op(f"o{i}", 256, n, spec), arch4, m,
+                             cache=cache)
+    assert len(cache) == 2 and cache.stats()["evictions"] == 1
+    # capacity 0 disables storage entirely
+    off = TileGridCache(capacity=0)
+    reshape_and_compress(_op("x", 64, 64, spec), arch4, m, cache=off)
+    assert len(off) == 0
+
+
+def test_reference_mode_bypasses_cache(arch4):
+    cache = TileGridCache()
+    m = default_mapping(arch4).reshape
+    op = _op("a", 256, 128, row_block(0.8, 16))
+    with M.reference_loops():
+        reshape_and_compress(op, arch4, m, cache=cache)
+    assert len(cache) == 0 and cache.stats()["misses"] == 0
+
+
+def test_cached_grids_are_read_only(arch4):
+    g = reshape_and_compress(_op("a", 128, 64, row_block(0.8, 16)), arch4,
+                             default_mapping(arch4).reshape,
+                             cache=TileGridCache())
+    with pytest.raises(ValueError):
+        g.occupancy[0, 0] = 1.0
+    with pytest.raises(ValueError):
+        g.k_eff[0] = 1
