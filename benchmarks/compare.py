@@ -17,6 +17,15 @@ Usage:
 that many times faster than the baseline total (e.g. ``--min-speedup 5``
 certifies the tentpole's acceptance bar).
 
+Suites present in the current run but absent from the baseline (a suite
+added after the baseline was frozen, e.g. ``schedule``) are
+**informational**: their rows print as ``NEW (informational)``, they are
+excluded from the per-suite gate and from both totals, and they can
+never fail the build — the gate stays green for new suites without
+weakening the thresholds on the measured ones.  Re-freeze the baseline
+(``python -m benchmarks.run --json BENCH_baseline.json --repeat 3``)
+when a new suite should start gating.
+
 Exit status: 0 = within budget, 1 = regression (or speedup bar missed),
 2 = unusable inputs.
 """
@@ -64,9 +73,12 @@ def compare_summaries(baseline: Dict, current: Dict, *,
                     f"suite {name!r} regressed {delta:+.1%} "
                     f"({b:.3f}s -> {c:.3f}s, budget +{max_regress:.0%})")
         rows.append(row)
+    # Suites without a baseline have nothing to diff against: report
+    # them, but keep them out of the gate and of both totals.
     for name in sorted(set(cur) - set(base)):
         rows.append({"suite": name, "baseline_s": None,
-                     "current_s": cur[name], "delta": "NEW"})
+                     "current_s": cur[name],
+                     "delta": "NEW (informational)"})
 
     b_tot = sum(base.values())
     c_tot = sum(cur.get(n, 0.0) for n in base if n in cur)

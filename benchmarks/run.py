@@ -4,6 +4,7 @@
   runtime_analysis     paper Fig. 7             (framework runtime)
   sparsity_exploration paper Fig. 8–10 / Tab II (§VII-B use-case)
   mapping_exploration  paper Fig. 11–12         (§VII-C use-case)
+  schedule_exploration paper §IV use-case 2     (multi-macro scheduling)
 
 Usage:  PYTHONPATH=src python -m benchmarks.run [--only NAME] [--csv FILE]
                                                 [--workers N] [--json [FILE]]
@@ -35,18 +36,19 @@ import statistics
 import time
 from typing import Dict, List
 
-from . import (mapping_exploration, runtime_analysis, sparsity_exploration,
-               validation)
+from . import (mapping_exploration, runtime_analysis, schedule_exploration,
+               sparsity_exploration, validation)
 
 SUITES = {
     "validation": validation.run,
     "runtime": runtime_analysis.run,
     "sparsity": sparsity_exploration.run,
     "mapping": mapping_exploration.run,
+    "schedule": schedule_exploration.run,
 }
 
 # suites built on the repro.explore engine accept a worker count
-PARALLEL_SUITES = ("sparsity", "mapping")
+PARALLEL_SUITES = ("sparsity", "mapping", "schedule")
 
 
 def _fmt(row: Dict) -> str:

@@ -7,6 +7,7 @@ Public API:
 * Hardware description (§IV-C):        :mod:`repro.core.hardware` / presets
 * Workload DAG (§IV-C):                :mod:`repro.core.workload`
 * Mapping description (§IV-C):         :mod:`repro.core.mapping`
+* Multi-macro DAG scheduling (§IV):    :mod:`repro.core.schedule`
 * Cost model (§V):                     :mod:`repro.core.costmodel`
 * Input-sparsity profiling (§IV-B):    :mod:`repro.core.input_sparsity`
 * Exploration sweeps (§VII):           :mod:`repro.core.explorer`
@@ -19,8 +20,11 @@ from .flexblock import (FlexBlockSpec, FullBlock, IntraBlock, TABLE_II_PATTERNS,
 from .hardware import CIMArch, ComputeUnit, MacroSpec, MemoryUnit
 from .mapping import (MappingSpec, ReshapeSpec, default_mapping,
                       duplicate_mapping, reshape_and_compress, spatial_mapping)
-from .costmodel import compare, dense_baseline, dense_twin, simulate
+from .costmodel import (compare, dense_baseline, dense_twin, simulate,
+                        simulate_reference)
 from .report import CostReport, OpCost
+from .schedule import (POLICIES, OpExec, SchedulePolicy, ScheduledOp,
+                       ScheduleResult, build_schedule, critical_path)
 from .workload import (MODEL_BUILDERS, OpNode, Workload, lm_workload,
                        mobilenet_v2, resnet18, resnet50, vgg16)
 from .presets import mars_arch, sdp_arch, usecase_arch, PRESET_ARCHS
@@ -46,8 +50,11 @@ __all__ = [
     "MappingSpec", "ReshapeSpec", "default_mapping", "duplicate_mapping",
     "reshape_and_compress", "spatial_mapping",
     # cost model
-    "compare", "dense_baseline", "dense_twin", "simulate", "CostReport",
-    "OpCost",
+    "compare", "dense_baseline", "dense_twin", "simulate",
+    "simulate_reference", "CostReport", "OpCost",
+    # scheduling
+    "POLICIES", "OpExec", "SchedulePolicy", "ScheduledOp", "ScheduleResult",
+    "build_schedule", "critical_path",
     # pruning
     "block_losses", "flexblock_mask", "fullblock_mask", "intrablock_mask",
     "prune_matrix",

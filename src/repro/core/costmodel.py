@@ -13,18 +13,26 @@ Sparsity-support overhead (§V-B): index-memory traffic and capacity
 (Eq. 8), IntraBlock input-select multiplexers, misaligned partial-sum
 accumulators, and pre-processing zero-bit detection for input sparsity.
 
-The simulation walks the workload DAG op by op, tiles each MVM op via
+The simulation tiles each MVM op via
 :func:`repro.core.mapping.reshape_and_compress`, schedules tiles over the
 macro organisation per the mapping strategy, and accumulates unit access
 counts exactly (cycle-accurate at tile granularity, the level the paper
-validates at).
+validates at).  How the *ops* share the organisation in time is the
+scheduling layer's job (:mod:`repro.core.schedule`): :func:`simulate`
+costs every op, builds scheduler-facing execution profiles, resolves the
+:class:`~repro.core.schedule.SchedulePolicy` into a
+:class:`~repro.core.schedule.ScheduleResult` (per-op start/end cycles,
+critical path, macro shares), and reports the schedule's total.  The
+default ``"monolithic"`` policy reproduces the historical op-serial walk
+bit-for-bit (:func:`simulate_reference` retains that walk as the test
+ground truth).
 """
 from __future__ import annotations
 
 import copy
 import dataclasses
 import math
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -35,10 +43,11 @@ from .hardware import CIMArch
 from .mapping import (MappingSpec, TileGridCache, _band_stats_loop,
                       reshape_and_compress)
 from .report import CostReport, OpCost
+from .schedule import OpExec, SchedulePolicy, build_schedule
 from .workload import OpNode, Workload
 
-__all__ = ["simulate", "dense_baseline", "dense_twin", "compare",
-           "op_class"]
+__all__ = ["simulate", "simulate_reference", "dense_baseline", "dense_twin",
+           "compare", "op_class"]
 
 
 def op_class(op: OpNode) -> str:
@@ -97,6 +106,12 @@ class _OpLedger:
     apply in recorded order — float accumulation order (and therefore the
     energy breakdown) is bit-identical to calling the accounting methods
     directly.
+
+    ``pinned`` marks traffic that a resident schedule pays once across
+    repeated invocations (weight fill/loads, stored-once index
+    metadata).  The flag rides on the event itself — keying on buffer
+    *names* would misclassify activation traffic on unified-buffer
+    arches, where weights and activations share one ``global_buf``.
     """
 
     __slots__ = ("events",)
@@ -105,13 +120,13 @@ class _OpLedger:
         self.events: List[tuple] = []
 
     def acc(self, unit: str, n: float) -> None:
-        self.events.append((_ACC, unit, n))
+        self.events.append((_ACC, unit, n, False))
 
-    def read(self, mem: str, bits: float) -> None:
-        self.events.append((_READ, mem, bits))
+    def read(self, mem: str, bits: float, *, pinned: bool = False) -> None:
+        self.events.append((_READ, mem, bits, pinned))
 
-    def write(self, mem: str, bits: float) -> None:
-        self.events.append((_WRITE, mem, bits))
+    def write(self, mem: str, bits: float, *, pinned: bool = False) -> None:
+        self.events.append((_WRITE, mem, bits, pinned))
 
 
 class _Accounting:
@@ -135,22 +150,34 @@ class _Accounting:
         if mem in self.mem_wr and bits > 0:
             self.mem_wr[mem] += bits / self.arch.mem(mem).width_bits
 
-    def commit(self, ledger: _OpLedger) -> None:
-        """Absorb one op's buffered events in a single pass."""
+    def commit(self, ledger: _OpLedger, *, scale: float = 1.0,
+               honor_pins: bool = False) -> None:
+        """Absorb one op's buffered events in a single pass.
+
+        ``scale`` multiplies every event — the schedule's invocation
+        count (repeated DAG executions repeat every access).  With
+        ``honor_pins`` (set for ops a resident schedule keeps loaded),
+        events the ledger recorded as ``pinned`` commit once regardless:
+        weight fill/loads and stored-once index metadata amortise across
+        invocations while activation traffic keeps scaling.
+        ``scale == 1.0`` leaves every value bit-for-bit untouched.
+        """
         comp, rd, wr = self.compute_acc, self.mem_rd, self.mem_wr
         mems = self.arch.memory_units
-        for kind, unit, val in ledger.events:
+        for kind, unit, val, pinned in ledger.events:
             if val <= 0:
                 continue
+            s = 1.0 if (pinned and honor_pins) else scale
+            v = val if s == 1.0 else val * s
             if kind == _ACC:
                 if unit in comp:
-                    comp[unit] += val
+                    comp[unit] += v
             elif kind == _READ:
                 if unit in rd:
-                    rd[unit] += val / mems[unit].width_bits
+                    rd[unit] += v / mems[unit].width_bits
             else:
                 if unit in wr:
-                    wr[unit] += val / mems[unit].width_bits
+                    wr[unit] += v / mems[unit].width_bits
 
     def energy_breakdown(self, latency_cycles: float) -> Dict[str, float]:
         """Eq. 4–7, in pJ."""
@@ -186,6 +213,19 @@ def _output_buffer(arch: CIMArch) -> str:
         if arch.has_mem(cand):
             return cand
     return next(iter(arch.memory_units))
+
+
+def _macro_demand(bands: int, waves: int, n_macros: int,
+                  bands_per_macro: int) -> int:
+    """Macros an op's resident bands (incl. duplication replicas) occupy.
+
+    Multi-wave ops cycle the whole organisation; single-wave ops occupy
+    exactly the macros their bands pack into — the subset the
+    partitioned scheduler may hand them without changing their cost.
+    """
+    if waves > 1:
+        return n_macros
+    return min(n_macros, max(1, math.ceil(bands / bands_per_macro)))
 
 
 def _mvm_op_cost(
@@ -315,8 +355,10 @@ def _mvm_op_cost(
     # ---- memory traffic -------------------------------------------------------------
     ibuf, wbuf, obuf = _input_buffer(arch), _weight_buffer(arch), _output_buffer(arch)
     w_bits = float(np.sum(grid.k_eff)) * macro.weight_bits
-    acct.write(wbuf, w_bits)                      # filled once (off-chip DMA)
-    acct.read(wbuf, w_bits * dup)                 # array loads, × replicas
+    # weight traffic is pinned: a resident schedule pays it once however
+    # many invocations run (the activation traffic below always recurs)
+    acct.write(wbuf, w_bits, pinned=True)         # filled once (off-chip DMA)
+    acct.read(wbuf, w_bits * dup, pinned=True)    # array loads, × replicas
     # inputs: FullBlock row compression cuts traffic; IntraBlock does not
     # (each compressed row receives its intra_fanin broadcast candidates).
     mean_k = float(np.mean(k_cols)) if len(k_cols) else float(grid.K)
@@ -334,7 +376,7 @@ def _mvm_op_cost(
     idx_bits = 0
     if not spec.is_dense and arch.weight_sparsity_support:
         idx_bits = spec.index_storage_bits((op.K, op.N))          # Eq. 8
-        acct.write("index_mem", float(idx_bits))                  # stored once
+        acct.write("index_mem", float(idx_bits), pinned=True)     # stored once
         acct.read("index_mem", float(idx_bits))                   # streamed once/op
         if grid.intra_fanin > 1 and len(k_cols):
             # mux select: every compressed row picks 1-of-fanin per vector
@@ -345,25 +387,109 @@ def _mvm_op_cost(
     # utilisation: real weight rows (× replicas) over provisioned capacity
     provisioned = waves * (n_macros * bands_per_macro) * macro.sub_rows
     util = min(1.0, row_demand * dup / max(provisioned, 1))
+    # scheduling metadata: the op's resident band footprint (replicas
+    # included) and the macros those bands actually occupy — the demand
+    # the partitioned scheduler packs disjoint subsets from (an op never
+    # benefited from macros its bands don't touch, so granting exactly
+    # this share leaves latency and access counts untouched).
+    bands_resident = B * dup
+    m_need = _macro_demand(bands_resident, waves, n_macros, bands_per_macro)
     return OpCost(name=op.name, kind=op.kind, latency_cycles=lat,
                   macs=op.macs, tiles=n_band_tiles or 1, waves=waves,
                   utilization=util, index_bits=idx_bits,
-                  occupancy=grid.mean_occupancy)
+                  occupancy=grid.mean_occupancy,
+                  bands=bands_resident, load_cycles=float(load_cycles),
+                  macros=m_need, macro_share=m_need / n_macros)
 
 
 def _other_op_cost(op: OpNode, arch: CIMArch, acct: _OpLedger) -> OpCost:
-    """Non-MVM ops (pool / act / add / norm / embed) run on post_proc."""
+    """Non-MVM ops (pool / act / add / norm / embed) run on post_proc.
+
+    Buffer traffic is priced at the macro's activation width
+    (``macro.input_bits``) — post-processing consumes/produces the same
+    quantised activations the arrays chew, so 4-bit / 16-bit arch sweeps
+    see consistently scaled post-proc traffic.
+    """
     post = arch.unit("post_proc")
+    act_bits = float(arch.macro.input_bits)
     n = max(op.elements, 1)
     cycles = math.ceil(n / max(post.width, 1))
     acct.acc("post_proc", float(n))
-    acct.read(_input_buffer(arch), float(n) * 8)
-    acct.write(_output_buffer(arch), float(n) * 8)
+    acct.read(_input_buffer(arch), float(n) * act_bits)
+    acct.write(_output_buffer(arch), float(n) * act_bits)
     if op.kind == "embed":
-        acct.read(_weight_buffer(arch), float(n) * 8)
+        acct.read(_weight_buffer(arch), float(n) * act_bits)
     return OpCost(name=op.name, kind=op.kind, latency_cycles=float(cycles),
                   macs=0, tiles=0, waves=0, utilization=0.0, index_bits=0,
                   occupancy=0.0)
+
+
+def _cost_ops(
+    arch: CIMArch,
+    workload: Workload,
+    mapping: MappingSpec,
+    *,
+    input_sparsity: Optional[Dict[str, float]],
+    masks: Optional[Dict[str, np.ndarray]],
+    profile: Optional[CalibrationProfile],
+    tile_cache: Optional[TileGridCache],
+) -> List[Tuple[OpNode, Optional[OpCost], _OpLedger]]:
+    """Per-op costing pass, shared by :func:`simulate` and
+    :func:`simulate_reference` so the scheduling layer can be proved
+    behavior-preserving against the retained op-serial aggregation.
+
+    Returns ``(op, OpCost | None, ledger)`` triples in DAG insertion
+    order; ``None`` marks ops outside the arch's ``eval_scope`` (Table
+    I's conv-only setups), which carry zero cost and only convey
+    dependencies.
+    """
+    scoped = {o.name for o in workload.mvm_ops(arch.eval_scope)}
+    out: List[Tuple[OpNode, Optional[OpCost], _OpLedger]] = []
+    for op in workload.nodes.values():
+        led = _OpLedger()
+        if (op.is_mvm or op.kind == "dwconv") and op.name in scoped:
+            oc = _mvm_op_cost(op, arch, mapping, led,
+                              input_skip_ratio=(input_sparsity or {}).get(op.name, 0.0),
+                              block_keep=(masks or {}).get(op.name),
+                              tile_cache=tile_cache)
+        elif arch.eval_scope == "conv_only":
+            # Table I: MARS evaluates conv layers only — everything else
+            # is outside the measured scope entirely.
+            oc = None
+        else:
+            oc = _other_op_cost(op, arch, led)
+        if oc is not None and profile is not None:
+            eff = profile.efficiency_for(op_class(op))
+            if eff != 1.0:
+                oc.latency_cycles /= eff
+                oc.load_cycles /= eff
+        out.append((op, oc, led))
+    return out
+
+
+def _op_execs(arch: CIMArch,
+              costed: List[Tuple[OpNode, Optional[OpCost], _OpLedger]],
+              ) -> Dict[str, OpExec]:
+    """Scheduler-facing execution profiles for every DAG node."""
+    execs: Dict[str, OpExec] = {}
+    for op, oc, _ in costed:
+        if oc is None:
+            execs[op.name] = OpExec(name=op.name, duration=0.0)
+        elif oc.tiles > 0:                   # MVM on the CIM organisation
+            # single-wave pipelines are load+comp+wb, so hoisting the
+            # load (resident steady state) subtracts it exactly
+            steady = (oc.latency_cycles - oc.load_cycles
+                      if oc.waves <= 1 else oc.latency_cycles)
+            execs[op.name] = OpExec(
+                name=op.name, duration=oc.latency_cycles, steady=steady,
+                load_cycles=oc.load_cycles, macros=oc.macros,
+                bands=oc.bands, waves=oc.waves)
+        else:                                # post-processing unit
+            execs[op.name] = OpExec(name=op.name,
+                                    duration=oc.latency_cycles,
+                                    steady=oc.latency_cycles,
+                                    uses_post=True)
+    return execs
 
 
 def simulate(
@@ -375,6 +501,7 @@ def simulate(
     masks: Optional[Dict[str, np.ndarray]] = None,
     profile: Optional[CalibrationProfile] = None,
     tile_cache: Optional[TileGridCache] = None,
+    schedule: Optional[SchedulePolicy] = None,
 ) -> CostReport:
     """Run the CIMinus cost simulation.
 
@@ -395,30 +522,107 @@ def simulate(
     :class:`~repro.core.mapping.TileGridCache` the tiling hot path
     memoises into (``None`` = share the module default, which is what
     sweep workers rely on to warm once per process).
+    ``schedule`` selects the multi-macro scheduling policy
+    (:mod:`repro.core.schedule`): ``None`` (= the default
+    ``SchedulePolicy()``) is the historical op-serial walk on the whole
+    organisation, bit-for-bit; ``"partitioned"`` overlaps independent
+    DAG branches on disjoint macro subsets; ``"resident"`` pins weights
+    across ``invocations`` repeated executions.  The resolved
+    :class:`~repro.core.schedule.ScheduleResult` is attached to the
+    report and mirrored into each op's ``start_cycle`` / ``end_cycle``.
+    """
+    arch.validate()
+    policy = schedule if schedule is not None else SchedulePolicy()
+    costed = _cost_ops(arch, workload, mapping,
+                       input_sparsity=input_sparsity, masks=masks,
+                       profile=profile, tile_cache=tile_cache)
+
+    bands_per_macro = arch.macro.rows // arch.macro.sub_rows
+    sched = build_schedule(workload, policy, _op_execs(arch, costed),
+                           n_macros=arch.n_macros,
+                           band_slots=arch.n_macros * bands_per_macro)
+
+    # mirror placements onto the per-op costs (steady-state invocation;
+    # the resident preload sits before cycle 0 of this timeline)
+    placed = {s.name: s for s in sched.ops}
+    op_costs: List[OpCost] = []
+    for op, oc, _ in costed:
+        if oc is None:
+            continue
+        s = placed[op.name]
+        oc.start_cycle, oc.end_cycle = s.start, s.end
+        op_costs.append(oc)
+
+    # commit access ledgers in DAG order, scaled by the invocation count;
+    # a resident schedule honors the ledger's pinned events (MVM weight
+    # fill/loads, stored-once index metadata) so only the first
+    # invocation pays them — activation traffic recurs either way
+    acct = _Accounting(arch)
+    n_inv = float(policy.invocations)
+    for op, oc, led in costed:
+        acct.commit(led, scale=n_inv,
+                    honor_pins=sched.resident and oc is not None
+                    and oc.tiles > 0)
+
+    total_cycles = sched.total_cycles
+    energy = acct.energy_breakdown(total_cycles)
+    mvm_costs = [c for c in op_costs if c.tiles > 0]
+    util = (sum(c.utilization * c.macs for c in mvm_costs)
+            / max(sum(c.macs for c in mvm_costs), 1)) if mvm_costs else 0.0
+    idx_bits = sum(c.index_bits for c in op_costs)
+    cap = arch.index_capacity_bits()
+    return CostReport(
+        arch=arch.name,
+        workload=workload.name,
+        mapping=mapping.strategy,
+        latency_cycles=total_cycles,
+        latency_ms=total_cycles * arch.cycle_ns * 1e-6,
+        energy_pj=energy,
+        total_energy_uj=sum(energy.values()) * 1e-6,
+        utilization=util,
+        op_costs=op_costs,
+        index_storage_bits=idx_bits,
+        # index_capacity_bits() already returns bits — the historical
+        # `cap * 64` slack silently passed workloads 64x over capacity
+        index_capacity_ok=(cap == 0 or idx_bits <= cap),
+        schedule=sched,
+    )
+
+
+def simulate_reference(
+    arch: CIMArch,
+    workload: Workload,
+    mapping: MappingSpec,
+    *,
+    input_sparsity: Optional[Dict[str, float]] = None,
+    masks: Optional[Dict[str, np.ndarray]] = None,
+    profile: Optional[CalibrationProfile] = None,
+    tile_cache: Optional[TileGridCache] = None,
+) -> CostReport:
+    """The pre-scheduler op-serial simulator, retained as ground truth.
+
+    Per-op costing is shared with :func:`simulate`; the *aggregation*
+    replays the historical loop verbatim — every op on the whole
+    organisation, serialised in DAG insertion order, total latency the
+    plain left-to-right sum, ledgers committed per op, no schedule
+    built.  ``tests/test_schedule.py`` asserts the ``"monolithic"``
+    policy reproduces this bit-for-bit across patterns × strategies ×
+    workloads (the PR-4 ``reference_loops`` discipline).  Test-only —
+    production callers use :func:`simulate`.
     """
     arch.validate()
     acct = _Accounting(arch)
     op_costs: List[OpCost] = []
-    scoped = {o.name for o in workload.mvm_ops(arch.eval_scope)}
-
-    for op in workload.nodes.values():
-        led = _OpLedger()
-        if (op.is_mvm or op.kind == "dwconv") and op.name in scoped:
-            oc = _mvm_op_cost(op, arch, mapping, led,
-                              input_skip_ratio=(input_sparsity or {}).get(op.name, 0.0),
-                              block_keep=(masks or {}).get(op.name),
-                              tile_cache=tile_cache)
-        elif arch.eval_scope == "conv_only":
-            # Table I: MARS evaluates conv layers only — everything else
-            # is outside the measured scope entirely.
+    cum = 0.0
+    for op, oc, led in _cost_ops(arch, workload, mapping,
+                                 input_sparsity=input_sparsity, masks=masks,
+                                 profile=profile, tile_cache=tile_cache):
+        if oc is None:
             continue
-        else:
-            oc = _other_op_cost(op, arch, led)
         acct.commit(led)
-        if profile is not None:
-            eff = profile.efficiency_for(op_class(op))
-            if eff != 1.0:
-                oc.latency_cycles /= eff
+        oc.start_cycle = cum
+        cum = cum + oc.latency_cycles
+        oc.end_cycle = cum
         op_costs.append(oc)
 
     # Ops are data-dependent along the DAG, so they serialise at op
@@ -443,7 +647,8 @@ def simulate(
         utilization=util,
         op_costs=op_costs,
         index_storage_bits=idx_bits,
-        index_capacity_ok=(cap == 0 or idx_bits <= cap * 64),
+        index_capacity_ok=(cap == 0 or idx_bits <= cap),
+        schedule=None,
     )
 
 
@@ -466,11 +671,15 @@ def dense_twin(arch: CIMArch, workload: Workload) -> tuple:
 
 def dense_baseline(arch: CIMArch, workload: Workload,
                    mapping: MappingSpec,
-                   profile: Optional[CalibrationProfile] = None) -> CostReport:
+                   profile: Optional[CalibrationProfile] = None,
+                   schedule: Optional[SchedulePolicy] = None) -> CostReport:
     """The paper's dense baseline: same architecture configuration, no
-    sparsity-support hardware engaged, dense weights."""
+    sparsity-support hardware engaged, dense weights.  ``schedule``
+    follows the sparse evaluation's policy so comparisons stay
+    like-for-like."""
     dense_arch, dense_wl = dense_twin(arch, workload)
-    return simulate(dense_arch, dense_wl, mapping, profile=profile)
+    return simulate(dense_arch, dense_wl, mapping, profile=profile,
+                    schedule=schedule)
 
 
 def compare(sparse: CostReport, dense: CostReport) -> Dict[str, float]:

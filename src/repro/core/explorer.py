@@ -32,6 +32,7 @@ def sweep_sparsity(
     mapping: Optional[MappingSpec] = None,
     pattern_factory: Optional[Callable[[float], Dict[str, FlexBlockSpec]]] = None,
     input_sparsity: Optional[Dict[str, float]] = None,
+    schedule=None,
     workers: Optional[int] = 1,
     runner=None,
 ) -> List[Dict]:
@@ -41,7 +42,7 @@ def sweep_sparsity(
     return sparsity_sweep(
         arch, workload_fn, patterns, ratios=ratios, mapping=mapping,
         pattern_factory=pattern_factory, input_sparsity=input_sparsity,
-        workers=workers, runner=runner,
+        schedule=schedule, workers=workers, runner=runner,
     ).rows
 
 
@@ -53,6 +54,7 @@ def sweep_mappings(
     orgs: Sequence[Tuple[int, int]] = ((8, 2), (4, 4), (2, 8)),
     strategies: Sequence[str] = ("spatial", "duplicate"),
     rearrange: Sequence[Optional[str]] = (None,),
+    schedule=None,
     workers: Optional[int] = 1,
     runner=None,
 ) -> List[Dict]:
@@ -61,7 +63,8 @@ def sweep_mappings(
 
     return mapping_sweep(
         arch_fn, workload_fn, spec, orgs=orgs, strategies=strategies,
-        rearrange=rearrange, workers=workers, runner=runner,
+        rearrange=rearrange, schedule=schedule, workers=workers,
+        runner=runner,
     ).rows
 
 

@@ -3,7 +3,9 @@ from __future__ import annotations
 
 import dataclasses
 import json
-from typing import Dict, List
+from typing import Dict, List, Optional
+
+from .schedule import ScheduleResult
 
 __all__ = ["OpCost", "CostReport"]
 
@@ -19,6 +21,18 @@ class OpCost:
     utilization: float
     index_bits: int
     occupancy: float
+    # scheduling layer (repro.core.schedule): the op's resident band
+    # footprint (bands × duplication replicas), its per-wave weight-load
+    # cycles, the macros those bands occupy (count + org fraction — the
+    # partitioned scheduler's demand, computed once at costing time),
+    # and its placement in the resolved schedule (cycles within one
+    # invocation; for serial policies starts are simply cumulative).
+    bands: int = 0
+    load_cycles: float = 0.0
+    macros: int = 0
+    macro_share: float = 0.0
+    start_cycle: float = 0.0
+    end_cycle: float = 0.0
 
 
 @dataclasses.dataclass
@@ -36,6 +50,11 @@ class CostReport:
     op_costs: List[OpCost]
     index_storage_bits: int
     index_capacity_ok: bool
+    # Resolved multi-macro schedule (None for the retained pre-scheduler
+    # reference path): per-op start/end cycles, critical path, macro
+    # shares, resident/preload accounting.  ``latency_cycles`` above is
+    # its ``total_cycles``.
+    schedule: Optional[ScheduleResult] = None
 
     # -- views ---------------------------------------------------------------
     def energy_shares(self) -> Dict[str, float]:
@@ -69,7 +88,13 @@ class CostReport:
 
     def summary(self) -> str:
         g = self.grouped_energy()
-        return (f"{self.workload} on {self.arch} [{self.mapping}]: "
+        sched = ""
+        if self.schedule is not None and (
+                self.schedule.policy != "monolithic"
+                or self.schedule.invocations != 1):
+            sched = (f"/{self.schedule.policy}"
+                     f"x{self.schedule.invocations}")
+        return (f"{self.workload} on {self.arch} [{self.mapping}{sched}]: "
                 f"{self.latency_ms:.3f} ms, {self.total_energy_uj:.2f} uJ, "
                 f"util={self.utilization:.2%}, "
                 f"idx={self.index_storage_bits/8/1024:.1f} KiB, "

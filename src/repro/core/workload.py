@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+from collections import deque
 from typing import Dict, Iterable, List, Optional, Tuple
 
 from .flexblock import FlexBlockSpec, dense_spec
@@ -106,6 +107,61 @@ class Workload:
     def simple(self, name, kind, elements, inputs=()):
         return self.add(OpNode(name=name, kind=kind, elements=elements,
                                inputs=tuple(inputs)))
+
+    # -- DAG structure --------------------------------------------------------
+    def successors(self) -> Dict[str, List[str]]:
+        """Producer → consumers adjacency (insertion-ordered)."""
+        succ: Dict[str, List[str]] = {name: [] for name in self.nodes}
+        for node in self.nodes.values():
+            for inp in node.inputs:
+                if inp not in succ:
+                    raise ValueError(
+                        f"{node.name}: unknown input {inp!r}")
+                succ[inp].append(node.name)
+        return succ
+
+    def topo_order(self) -> List[str]:
+        """Topological op order (Kahn), stable w.r.t. insertion order.
+
+        :meth:`add` already forbids forward references, so workloads built
+        through the public API are topologically ordered by construction —
+        but the scheduler (:mod:`repro.core.schedule`) must not trust
+        callers that splice ``nodes`` directly, so cycles raise
+        ``ValueError`` here.
+        """
+        succ = self.successors()
+        indeg = {name: len(node.inputs) for name, node in self.nodes.items()}
+        ready = deque(name for name, d in indeg.items() if d == 0)
+        order: List[str] = []
+        while ready:
+            name = ready.popleft()
+            order.append(name)
+            for s in succ[name]:
+                indeg[s] -= 1
+                if indeg[s] == 0:
+                    ready.append(s)
+        if len(order) != len(self.nodes):
+            stuck = sorted(n for n, d in indeg.items() if d > 0)
+            raise ValueError(
+                f"workload {self.name!r} has a dependency cycle "
+                f"involving {stuck}")
+        return order
+
+    def levels(self) -> List[List[str]]:
+        """ASAP dependency levels: ``levels()[i]`` holds the ops whose
+        longest input chain has exactly ``i`` predecessors — ops within a
+        level are mutually independent and may run concurrently (the
+        grouping the partitioned scheduler exploits).  Raises on cycles.
+        """
+        depth: Dict[str, int] = {}
+        for name in self.topo_order():
+            node = self.nodes[name]
+            depth[name] = (max(depth[i] for i in node.inputs) + 1
+                           if node.inputs else 0)
+        out: List[List[str]] = [[] for _ in range(max(depth.values(), default=-1) + 1)]
+        for name in self.nodes:              # insertion order within levels
+            out[depth[name]].append(name)
+        return out
 
     # -- queries --------------------------------------------------------------
     def mvm_ops(self, scope: str = "all") -> List[OpNode]:
@@ -288,9 +344,15 @@ def lm_workload(cfg, *, seq_len: int = 128, batch: int = 1) -> Workload:
         q = w.fc("attn_q", d, q_out, inputs=prev, v=v * L)
         k = w.fc("attn_k", d, kv_out, inputs=prev, v=v * L)
         vv = w.fc("attn_v", d, kv_out, inputs=prev, v=v * L)
-        # score/context matmuls: activation×activation, costed as matmul
+        # score/context matmuls: activation×activation, costed as matmul.
+        # Per head and layer the score GEMM pushes one seq_len-long vector
+        # batch of head_dim-deep queries against the K^T matrix, so
+        # V = heads × layers × batch × seq_len — spelled out explicitly
+        # (the old `n_heads * v * L // seq_len * seq_len` relied on
+        # left-to-right // precedence to cancel the seq_len factor).
         w.add(OpNode(name="attn_scores", kind="matmul", inputs=(q.name, k.name),
-                     K=head_dim, N=seq_len, V=cfg.n_heads * v * L // max(seq_len, 1) * seq_len,
+                     K=head_dim, N=seq_len,
+                     V=cfg.n_heads * batch * L * seq_len,
                      prunable=False, weight_count=0))
         o = w.fc("attn_o", q_out, d, inputs=(vv.name,), v=v * L)
         prev = (o.name,)

@@ -20,13 +20,13 @@ from .job import CACHE_SCHEMA, ExploreJob, canonical, content_key
 from .pareto import DEFAULT_OBJECTIVES, pareto_front, top_k
 from .runner import RunStats, SweepRunner, evaluate_job
 from .sweeps import (GridPoint, SweepResult, mapping_sweep, org_sweep,
-                     run_grid, sparsity_sweep)
+                     run_grid, schedule_sweep, sparsity_sweep)
 
 __all__ = [
     "CACHE_SCHEMA", "ExploreJob", "canonical", "content_key",
     "CacheStats", "ResultCache",
     "RunStats", "SweepRunner", "evaluate_job",
     "GridPoint", "SweepResult", "run_grid",
-    "sparsity_sweep", "mapping_sweep", "org_sweep",
+    "sparsity_sweep", "mapping_sweep", "org_sweep", "schedule_sweep",
     "DEFAULT_OBJECTIVES", "pareto_front", "top_k",
 ]

@@ -22,6 +22,17 @@ Examples::
 fitted peaks/efficiencies instead of the analytic assumptions.
 ``--diff-analytic`` additionally evaluates the analytic twin of every
 row and prints the calibrated/analytic latency and energy ratios.
+
+``--schedule POLICIES`` (comma list from {monolithic, partitioned,
+resident}, or ``all``) reruns any sweep across multi-macro scheduling
+policies (:mod:`repro.core.schedule`) and adds a ``schedule`` column;
+``--invocations N`` models N repeated DAG executions (decode steps /
+batches) so the resident policy's weight-pinning amortisation shows up::
+
+    python -m repro.explore sparsity --model resnet18 --ratios 0.8 \
+        --schedule all
+    python -m repro.explore lm --config llama3-8b --schedule \
+        monolithic,resident --invocations 16
 """
 from __future__ import annotations
 
@@ -32,12 +43,13 @@ from typing import Dict, List, Optional
 from ..core import (TABLE_II_PATTERNS, MODEL_BUILDERS, hybrid, lm_workload,
                     usecase_arch)
 from ..core.presets import PRESET_ARCHS
+from ..core.schedule import POLICIES, SchedulePolicy
 from .cache import ResultCache
 from .pareto import DEFAULT_OBJECTIVES
 from .runner import SweepRunner
 from .sweeps import SweepResult, mapping_sweep, sparsity_sweep
 
-_ROW_COLS = ("pattern", "ratio", "mapping", "org", "rearrange",
+_ROW_COLS = ("pattern", "ratio", "mapping", "org", "rearrange", "schedule",
              "latency_ms", "energy_uj", "utilization", "speedup",
              "energy_saving", "index_kib")
 
@@ -57,7 +69,7 @@ def _print_rows(rows: List[Dict], title: str) -> None:
         print("  " + "  ".join(cells))
 
 
-_KEY_COLS = ("pattern", "ratio", "mapping", "org", "rearrange")
+_KEY_COLS = ("pattern", "ratio", "mapping", "org", "rearrange", "schedule")
 
 
 def _print_diff(calibrated: List[Dict], analytic: List[Dict]) -> None:
@@ -181,6 +193,14 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--diff-analytic", action="store_true",
                     help="with --profile: also run the analytic twin of "
                          "every row and print the ratios")
+    ap.add_argument("--schedule", default=None, metavar="POLICIES",
+                    help="rerun the sweep across multi-macro scheduling "
+                         "policies (comma list from "
+                         f"{{{','.join(POLICIES)}}}, or 'all') and add a "
+                         "schedule column")
+    ap.add_argument("--invocations", type=int, default=1, metavar="N",
+                    help="repeated DAG executions per evaluation (resident "
+                         "amortises its weight preload across them)")
     args = ap.parse_args(argv)
 
     profile = None
@@ -195,15 +215,29 @@ def main(argv: Optional[List[str]] = None) -> int:
     if args.diff_analytic and profile is None:
         ap.error("--diff-analytic requires --profile")
 
+    if args.invocations < 1:
+        ap.error("--invocations must be >= 1")
+    policies: List[Optional[str]] = [None]
+    if args.schedule is not None:
+        text = ",".join(POLICIES) if args.schedule == "all" else args.schedule
+        policies = [t for t in text.split(",") if t]
+        bad = [p for p in policies if p not in POLICIES]
+        if bad:
+            ap.error(f"unknown schedule policies {bad}; "
+                     f"choose from {POLICIES} (or 'all')")
+        if not policies:
+            ap.error("--schedule must name at least one policy")
+
     runner = _runner(args)
     ratios = _parse_floats(ap, args.ratios)
 
-    def run_sweep(prof):
+    def run_sweep(prof, sched):
         if args.sweep == "sparsity":
             arch = PRESET_ARCHS[args.arch]() if args.arch else usecase_arch(4)
             wl_fn = lambda: MODEL_BUILDERS[args.model](args.img)  # noqa: E731
             return sparsity_sweep(
                 arch, wl_fn, {}, ratios=ratios, runner=runner, profile=prof,
+                schedule=sched,
                 pattern_factory=lambda r: TABLE_II_PATTERNS(r, c_in=16))
         if args.sweep == "mapping":
             wl_fn = lambda: MODEL_BUILDERS[args.model](args.img)  # noqa: E731
@@ -219,7 +253,8 @@ def main(argv: Optional[List[str]] = None) -> int:
                 hybrid(2, 16, args.spec_ratio),
                 orgs=_parse_orgs(ap, args.orgs),
                 strategies=tuple(t for t in args.strategies.split(",") if t),
-                rearrange=rearrange, runner=runner, profile=prof)
+                rearrange=rearrange, runner=runner, profile=prof,
+                schedule=sched)
         # lm
         from ..configs import get_config
         cfg = get_config(args.config)
@@ -227,11 +262,36 @@ def main(argv: Optional[List[str]] = None) -> int:
         wl_fn = lambda: lm_workload(cfg, seq_len=args.seq_len)  # noqa: E731
         return sparsity_sweep(
             arch, wl_fn, {}, ratios=ratios, runner=runner, profile=prof,
+            schedule=sched,
             pattern_factory=lambda r: TABLE_II_PATTERNS(r, c_in=16))
 
-    result = run_sweep(profile)
+    def run_policies(prof) -> SweepResult:
+        """One sweep per requested policy, concatenated with a
+        ``schedule`` column (rows stay grid-ordered within a policy)."""
+        results: List[SweepResult] = []
+        for pol in policies:
+            if pol is None:
+                sched = (SchedulePolicy(invocations=args.invocations)
+                         if args.invocations != 1 else None)
+            else:
+                sched = SchedulePolicy(policy=pol,
+                                       invocations=args.invocations)
+            r = run_sweep(prof, sched)
+            if pol is not None:
+                for row in r.rows:
+                    row["schedule"] = pol
+            results.append(r)
+        if len(results) == 1:
+            return results[0]
+        stats = results[0].stats
+        for r in results[1:]:
+            stats = stats.merge(r.stats)
+        return SweepResult(rows=[row for r in results for row in r.rows],
+                           stats=stats)
+
+    result = run_policies(profile)
     if args.diff_analytic:
-        _print_diff(result.rows, run_sweep(None).rows)
+        _print_diff(result.rows, run_policies(None).rows)
     return _finish(result, args)
 
 

@@ -27,6 +27,7 @@ import numpy as np
 from ..calibrate.profile import CalibrationProfile
 from ..core.hardware import CIMArch
 from ..core.mapping import MappingSpec
+from ..core.schedule import SchedulePolicy
 from ..core.workload import Workload
 
 __all__ = ["ExploreJob", "canonical", "content_key", "CACHE_SCHEMA"]
@@ -36,7 +37,10 @@ __all__ = ["ExploreJob", "canonical", "content_key", "CACHE_SCHEMA"]
 # 2: jobs grew a calibration-profile field (repro.calibrate).
 # 3: synthesised keep-grid seeds became shape-addressed (shared across
 #    same-shape ops), changing simulated results for FullBlock patterns.
-CACHE_SCHEMA = 3
+# 4: jobs grew a schedule-policy field (repro.core.schedule); reports
+#    carry ScheduleResult/per-op placement fields and the index-capacity
+#    check dropped its spurious 64x slack.
+CACHE_SCHEMA = 4
 
 
 @functools.lru_cache(maxsize=None)
@@ -140,6 +144,12 @@ class ExploreJob:
     (:mod:`repro.calibrate`); it scales the simulator's latency terms,
     so it is part of the job's content — analytic and calibrated
     evaluations of the same design never share a cache entry.
+    ``schedule`` is the multi-macro scheduling policy
+    (:class:`repro.core.schedule.SchedulePolicy`); it reshapes the
+    report's timing (and, for resident, the amortised weight traffic),
+    so it joins the canonical key.  The convenience constructors
+    normalise the explicit default ``SchedulePolicy()`` to ``None`` so
+    monolithic×1 jobs share one cache entry however they were spelled.
     """
 
     kind: str                                   # 'simulate' | 'dense'
@@ -149,6 +159,7 @@ class ExploreJob:
     input_sparsity: Optional[Tuple[Tuple[str, float], ...]] = None
     masks: Optional[Tuple[Tuple[str, np.ndarray], ...]] = None
     profile: Optional[CalibrationProfile] = None
+    schedule: Optional[SchedulePolicy] = None
 
     def __post_init__(self):
         if self.kind not in ("simulate", "dense"):
@@ -171,21 +182,29 @@ class ExploreJob:
 
     # -- convenience constructors -------------------------------------------
     @staticmethod
+    def _norm_schedule(schedule: Optional[SchedulePolicy]
+                       ) -> Optional[SchedulePolicy]:
+        return None if schedule == SchedulePolicy() else schedule
+
+    @staticmethod
     def simulate(arch: CIMArch, workload: Workload, mapping: MappingSpec, *,
                  input_sparsity: Optional[Dict[str, float]] = None,
                  masks: Optional[Dict[str, np.ndarray]] = None,
-                 profile: Optional[CalibrationProfile] = None) -> "ExploreJob":
+                 profile: Optional[CalibrationProfile] = None,
+                 schedule: Optional[SchedulePolicy] = None) -> "ExploreJob":
         return ExploreJob(
             kind="simulate", arch=arch, workload=workload, mapping=mapping,
             input_sparsity=(tuple(sorted(input_sparsity.items()))
                             if input_sparsity else None),
             masks=tuple(sorted(masks.items())) if masks else None,
             profile=profile,
+            schedule=ExploreJob._norm_schedule(schedule),
         )
 
     @staticmethod
     def dense(arch: CIMArch, workload: Workload, mapping: MappingSpec,
-              profile: Optional[CalibrationProfile] = None) -> "ExploreJob":
+              profile: Optional[CalibrationProfile] = None,
+              schedule: Optional[SchedulePolicy] = None) -> "ExploreJob":
         """Dense-baseline job: sparsity stripped, support hardware off.
 
         Stripping happens *here* (via :func:`~repro.core.costmodel.dense_twin`,
@@ -197,4 +216,5 @@ class ExploreJob:
 
         dense_arch, dense_wl = dense_twin(arch, workload)
         return ExploreJob(kind="dense", arch=dense_arch, workload=dense_wl,
-                          mapping=mapping, profile=profile)
+                          mapping=mapping, profile=profile,
+                          schedule=ExploreJob._norm_schedule(schedule))

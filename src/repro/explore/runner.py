@@ -49,6 +49,7 @@ def evaluate_job(job: ExploreJob) -> CostReport:
         input_sparsity=dict(job.input_sparsity) if job.input_sparsity else None,
         masks=dict(job.masks) if job.masks else None,
         profile=job.profile,
+        schedule=job.schedule,
     )
 
 

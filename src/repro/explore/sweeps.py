@@ -25,6 +25,7 @@ from ..core.flexblock import FlexBlockSpec
 from ..core.hardware import CIMArch
 from ..core.mapping import MappingSpec, default_mapping
 from ..core.report import CostReport
+from ..core.schedule import POLICIES, SchedulePolicy
 from ..core.workload import Workload
 from .cache import ResultCache
 from .job import ExploreJob
@@ -32,7 +33,7 @@ from .pareto import DEFAULT_OBJECTIVES, pareto_front, top_k
 from .runner import RunStats, SweepRunner
 
 __all__ = ["GridPoint", "SweepResult", "run_grid",
-           "sparsity_sweep", "mapping_sweep", "org_sweep"]
+           "sparsity_sweep", "mapping_sweep", "org_sweep", "schedule_sweep"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -143,6 +144,7 @@ def sparsity_sweep(
     pattern_factory: Optional[Callable[[float], Dict[str, FlexBlockSpec]]] = None,
     input_sparsity: Optional[Dict[str, float]] = None,
     profile: Optional[CalibrationProfile] = None,
+    schedule: Optional[SchedulePolicy] = None,
     runner: Optional[SweepRunner] = None,
     workers: Optional[int] = None,
     cache: Optional[ResultCache] = None,
@@ -152,10 +154,13 @@ def sparsity_sweep(
 
     All points share one dense baseline; the engine evaluates it once.
     ``profile`` switches the whole grid — sparse points and the shared
-    baseline alike — to calibrated mode (:mod:`repro.calibrate`).
+    baseline alike — to calibrated mode (:mod:`repro.calibrate`);
+    ``schedule`` likewise applies one scheduling policy to every point
+    and its baseline (:mod:`repro.core.schedule`).
     """
     mapping = mapping or default_mapping(arch)
-    dense = ExploreJob.dense(arch, workload_fn(), mapping, profile=profile)
+    dense = ExploreJob.dense(arch, workload_fn(), mapping, profile=profile,
+                             schedule=schedule)
     points: List[GridPoint] = []
     for ratio in ratios:
         pats = pattern_factory(ratio) if pattern_factory else patterns
@@ -163,7 +168,7 @@ def sparsity_sweep(
             wl = workload_fn().set_sparsity(spec)
             job = ExploreJob.simulate(arch, wl, mapping,
                                       input_sparsity=input_sparsity,
-                                      profile=profile)
+                                      profile=profile, schedule=schedule)
             points.append(GridPoint(job, dense,
                                     meta=(("pattern", name), ("ratio", ratio))))
     return run_grid(points, runner=runner, workers=workers, cache=cache,
@@ -179,6 +184,7 @@ def mapping_sweep(
     strategies: Sequence[str] = ("spatial", "duplicate"),
     rearrange: Sequence[Optional[str]] = (None,),
     profile: Optional[CalibrationProfile] = None,
+    schedule: Optional[SchedulePolicy] = None,
     runner: Optional[SweepRunner] = None,
     workers: Optional[int] = None,
     cache: Optional[ResultCache] = None,
@@ -190,8 +196,10 @@ def mapping_sweep(
         arch = arch_fn(org)
         mapping = default_mapping(arch, strat, rearrange=rr)
         wl = workload_fn().set_sparsity(spec)
-        job = ExploreJob.simulate(arch, wl, mapping, profile=profile)
-        dense = ExploreJob.dense(arch, wl, mapping, profile=profile)
+        job = ExploreJob.simulate(arch, wl, mapping, profile=profile,
+                                  schedule=schedule)
+        dense = ExploreJob.dense(arch, wl, mapping, profile=profile,
+                                 schedule=schedule)
         points.append(GridPoint(job, dense, meta=(
             ("pattern", spec.name), ("ratio", None),
             ("org", f"{org[0]}x{org[1]}"), ("rearrange", rr or "none"))))
@@ -209,3 +217,44 @@ def org_sweep(
 ) -> SweepResult:
     return mapping_sweep(arch_fn, workload_fn, spec, orgs=orgs,
                          strategies=(strategy,), **kw)
+
+
+def schedule_sweep(
+    arch: CIMArch,
+    workload_fn: Callable[[], Workload],
+    spec: FlexBlockSpec,
+    *,
+    policies: Sequence[str] = POLICIES,
+    strategies: Sequence[str] = ("spatial",),
+    invocations: Sequence[int] = (1,),
+    profile: Optional[CalibrationProfile] = None,
+    runner: Optional[SweepRunner] = None,
+    workers: Optional[int] = None,
+    cache: Optional[ResultCache] = None,
+    tile_cache_capacity: Optional[int] = None,
+) -> SweepResult:
+    """Scheduling-policy × mapping-strategy (× invocation-count) grid.
+
+    The new exploration axis the multi-macro scheduling layer opens
+    (paper §IV, use-case 2): how much does overlapping independent DAG
+    branches (``partitioned``) or pinning weights across repeated
+    executions (``resident``) buy on a given workload?  Each point's
+    dense baseline shares its policy, so the ``speedup`` column isolates
+    the sparsity gain while ``latency_ms`` is directly comparable across
+    rows of one strategy.
+    """
+    points: List[GridPoint] = []
+    for strat, pol, inv in itertools.product(strategies, policies,
+                                             invocations):
+        mapping = default_mapping(arch, strat)
+        sched = SchedulePolicy(policy=pol, invocations=inv)
+        wl = workload_fn().set_sparsity(spec)
+        job = ExploreJob.simulate(arch, wl, mapping, profile=profile,
+                                  schedule=sched)
+        dense = ExploreJob.dense(arch, wl, mapping, profile=profile,
+                                 schedule=sched)
+        points.append(GridPoint(job, dense, meta=(
+            ("pattern", spec.name), ("ratio", None),
+            ("schedule", pol), ("invocations", inv))))
+    return run_grid(points, runner=runner, workers=workers, cache=cache,
+                    tile_cache_capacity=tile_cache_capacity)

@@ -1,12 +1,15 @@
 """Cost-model behaviour tests (paper §V + Table I validation setups)."""
+import dataclasses
+
 import numpy as np
 import pytest
 
 from _hypothesis_shim import given, settings, st
 
-from repro.core import (compare, default_mapping, dense_baseline, hybrid,
-                        lm_workload, mars_arch, resnet18, resnet50, row_block,
-                        row_wise, sdp_arch, simulate, usecase_arch, vgg16)
+from repro.core import (OpNode, Workload, compare, default_mapping,
+                        dense_baseline, hybrid, lm_workload, mars_arch,
+                        resnet18, resnet50, row_block, row_wise, sdp_arch,
+                        simulate, usecase_arch, vgg16)
 from repro.core.flexblock import column_wise
 from repro.core.workload import mobilenet_v2
 
@@ -110,6 +113,84 @@ def test_index_capacity_flag(arch4):
     wl = vgg16(224, 1000).set_sparsity(hybrid(2, 16, 0.8))
     rep = simulate(arch4, wl, default_mapping(arch4))
     assert isinstance(rep.index_capacity_ok, bool)
+
+
+def test_index_capacity_checked_in_bits(arch4):
+    """``index_capacity_bits()`` already returns bits: the flag compares
+    Eq. 8 storage against it directly.  The historical check multiplied
+    the capacity by an unexplained 64, silently passing workloads up to
+    64x over capacity — this pin would have caught it.
+    """
+    cap = arch4.index_capacity_bits()
+    assert cap == 32 * 1024 * 8              # 32 KiB index memory
+
+    # resnet50's row-block index stream lands between cap and 64*cap:
+    # exactly the regime the old slack waved through
+    over = simulate(arch4, resnet50(32).set_sparsity(row_block(0.8, 16)),
+                    default_mapping(arch4))
+    assert cap < over.index_storage_bits <= cap * 64
+    assert over.index_capacity_ok is False
+
+    # a genuinely small workload stays within capacity
+    small = Workload("tiny")
+    small.add(OpNode(name="fc", kind="fc", K=64, N=64, V=1, c_in=64,
+                     sparsity=row_block(0.5, 16)))
+    under = simulate(arch4, small, default_mapping(arch4))
+    assert 0 < under.index_storage_bits <= cap
+    assert under.index_capacity_ok is True
+
+    # arches without an index memory never flag
+    no_idx = arch4.replace(
+        weight_sparsity_support=False,
+        memory_units={k: v for k, v in arch4.memory_units.items()
+                      if k != "index_mem"})
+    rep = simulate(no_idx, resnet50(32).set_sparsity(row_block(0.8, 16)),
+                   default_mapping(no_idx))
+    assert rep.index_capacity_ok is True
+
+
+def test_post_proc_traffic_scales_with_input_bits(arch4):
+    """_other_op_cost buffer traffic is priced at macro.input_bits, so a
+    4-bit arch moves half the post-proc bits of the 8-bit default."""
+    wl_fn = lambda: Workload("act-only")  # noqa: E731
+    wl8, wl4 = wl_fn(), wl_fn()
+    for wl in (wl8, wl4):
+        wl.add(OpNode(name="a", kind="act", elements=4096))
+        wl.add(OpNode(name="e", kind="embed", elements=4096, inputs=("a",),
+                      weight_count=0))
+    arch8 = arch4
+    arch4b = arch4.replace(
+        macro=dataclasses.replace(arch4.macro, input_bits=4))
+    m = default_mapping(arch8)
+    r8 = simulate(arch8, wl8, m)
+    r4 = simulate(arch4b, wl4, m)
+    for buf in ("input_buf", "output_buf", "weight_buf"):
+        assert r4.energy_pj[buf] == r8.energy_pj[buf] / 2, buf
+    # latency is element-count-bound on the post-proc SIMD width: unchanged
+    assert r4.latency_cycles == r8.latency_cycles
+
+
+def test_attn_scores_v_formula_explicit():
+    """Hand-computed regression for the lm_workload score-matmul volume:
+    per head × layer × batch element, seq_len query vectors stream
+    against K^T — V must be exactly heads × layers × batch × seq_len
+    for every LM config, including odd batch × head counts."""
+    from repro.configs import get_config, list_archs
+    cases = [(128, 1), (48, 3), (17, 5)]
+    for name in list_archs():
+        cfg = get_config(name)
+        if cfg.attention == "none":
+            continue
+        for seq_len, batch in cases:
+            wl = lm_workload(cfg, seq_len=seq_len, batch=batch)
+            sc = wl.nodes["attn_scores"]
+            assert sc.K == cfg.head_dim
+            assert sc.N == seq_len
+            assert sc.V == cfg.n_heads * cfg.n_layers * batch * seq_len, \
+                (name, seq_len, batch)
+            # and the projections feed it: q/k inputs, per-token volume
+            assert sc.inputs == ("attn_q", "attn_k")
+            assert wl.nodes["attn_q"].V == seq_len * batch * cfg.n_layers
 
 
 def test_lm_workload_lowering():

@@ -1,0 +1,494 @@
+"""Multi-macro DAG scheduler tests (``repro.core.schedule``).
+
+The tentpole acceptance sweep lives here: the ``"monolithic"`` policy
+must reproduce the retained pre-scheduler simulator
+(:func:`repro.core.costmodel.simulate_reference`) **bit-for-bit** across
+sparsity patterns × mapping strategies × workloads, proving the
+scheduling refactor behavior-preserving before the new policies open new
+design space.  The ``"partitioned"`` policy must beat monolithic on
+workloads with independent branches while leaving dynamic energy within
+the accounting identity (same access counts, reshuffled in time), and
+``"resident"`` must amortise weight loading across invocations — with a
+bit-identical monolithic fallback when the workload does not fit.
+
+Also covered: the new :meth:`Workload.topo_order` / :meth:`levels` DAG
+utilities (diamond / fan-out shapes, cycle rejection), the exploration
+plumbing (job keys, ``schedule_sweep``, the ``--schedule`` CLI), and the
+perf gate's informational handling of baseline-less suites.
+"""
+import dataclasses
+import importlib
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.configs import get_config
+from repro.core import (OpNode, SchedulePolicy, Workload, build_schedule,
+                        critical_path, default_mapping, dense_baseline,
+                        hybrid, lm_workload, mars_arch, resnet18, row_block,
+                        simulate, simulate_reference, usecase_arch)
+from repro.core.schedule import OpExec, POLICIES
+from repro.explore import CACHE_SCHEMA, ExploreJob, schedule_sweep
+
+
+@pytest.fixture(scope="module")
+def arch4():
+    return usecase_arch(4)
+
+
+@pytest.fixture(scope="module")
+def arch16():
+    return usecase_arch(16)
+
+
+def _mlp_stack(depth=3, width=512, v=64):
+    """Band-fitting fc stack (resident's home turf on a 16-macro org)."""
+    wl = Workload(f"mlp{depth}x{width}")
+    prev = ()
+    for i in range(depth):
+        wl.add(OpNode(name=f"fc{i}", kind="fc", K=width, N=width, V=v,
+                      c_in=width, inputs=prev,
+                      sparsity=row_block(0.8, 16)))
+        prev = (f"fc{i}",)
+    return wl
+
+
+# ---------------------------------------------------------------------------
+# Workload DAG utilities: topo_order / levels / successors.
+# ---------------------------------------------------------------------------
+
+def _diamond():
+    """The ResNet-shortcut shape: a → (b, c) → d."""
+    wl = Workload("diamond")
+    wl.simple("a", "act", 4)
+    wl.simple("b", "act", 4, inputs=("a",))
+    wl.simple("c", "act", 4, inputs=("a",))
+    wl.simple("d", "add", 4, inputs=("b", "c"))
+    return wl
+
+
+def _fanout():
+    """The attention Q/K/V shape: x → (q, k, v) → s(q,k) → o(s,v)."""
+    wl = Workload("qkv")
+    wl.simple("x", "act", 4)
+    for n in ("q", "k", "v"):
+        wl.fc(n, 8, 8, inputs=("x",))
+    wl.simple("s", "add", 4, inputs=("q", "k"))
+    wl.simple("o", "add", 4, inputs=("s", "v"))
+    return wl
+
+
+def test_topo_order_respects_dependencies():
+    for wl in (_diamond(), _fanout(), resnet18(32)):
+        order = wl.topo_order()
+        assert sorted(order) == sorted(wl.nodes)
+        pos = {n: i for i, n in enumerate(order)}
+        for node in wl.nodes.values():
+            for inp in node.inputs:
+                assert pos[inp] < pos[node.name], (node.name, inp)
+
+
+def test_topo_order_stable_wrt_insertion():
+    # the public API forbids forward references, so insertion order is
+    # already topological and Kahn must preserve it exactly
+    wl = _fanout()
+    assert wl.topo_order() == list(wl.nodes)
+
+
+def test_levels_diamond_and_fanout():
+    assert _diamond().levels() == [["a"], ["b", "c"], ["d"]]
+    assert _fanout().levels() == [["x"], ["q", "k", "v"], ["s"], ["o"]]
+
+
+def test_levels_resnet_shortcut_is_concurrent():
+    wl = resnet18(32)
+    lvl = {name: i for i, level in enumerate(wl.levels())
+           for name in level}
+    # the stage-1 shortcut conv reads the same input as the block's c1:
+    # same level → the partitioned scheduler may overlap them
+    assert lvl["s1b0_sc"] == lvl["s1b0_c1"]
+    assert lvl["s1b0_add"] > lvl["s1b0_c2"]
+
+
+def test_cycle_rejected():
+    wl = _diamond()
+    # splice a back-edge in behind the API (add() forbids forward refs)
+    wl.nodes["a"] = dataclasses.replace(wl.nodes["a"], inputs=("d",))
+    with pytest.raises(ValueError, match="cycle"):
+        wl.topo_order()
+    with pytest.raises(ValueError, match="cycle"):
+        wl.levels()
+
+
+def test_unknown_input_rejected():
+    wl = _diamond()
+    wl.nodes["ghost-user"] = OpNode(name="ghost-user", kind="act",
+                                    elements=1, inputs=("ghost",))
+    with pytest.raises(ValueError, match="unknown input"):
+        wl.topo_order()
+
+
+def test_critical_path_picks_longest_chain():
+    wl = _diamond()
+    path, cycles = critical_path(wl, {"a": 1.0, "b": 5.0, "c": 2.0,
+                                      "d": 1.0})
+    assert path == ["a", "b", "d"] and cycles == 7.0
+
+
+# ---------------------------------------------------------------------------
+# SchedulePolicy validation.
+# ---------------------------------------------------------------------------
+
+def test_schedule_policy_validation():
+    with pytest.raises(ValueError, match="unknown schedule policy"):
+        SchedulePolicy(policy="speculative")
+    with pytest.raises(ValueError, match="invocations"):
+        SchedulePolicy(invocations=0)
+    assert SchedulePolicy().policy == "monolithic"
+
+
+# ---------------------------------------------------------------------------
+# Tentpole equivalence sweep: monolithic == pre-scheduler, bit for bit.
+# ---------------------------------------------------------------------------
+
+def _assert_reports_identical(ref, rep, ctx):
+    assert ref.latency_cycles == rep.latency_cycles, ctx
+    assert ref.latency_ms == rep.latency_ms, ctx
+    assert ref.energy_pj == rep.energy_pj, ctx          # exact, per unit
+    assert ref.total_energy_uj == rep.total_energy_uj, ctx
+    assert ref.utilization == rep.utilization, ctx
+    assert ref.index_storage_bits == rep.index_storage_bits, ctx
+    assert ref.index_capacity_ok == rep.index_capacity_ok, ctx
+    assert len(ref.op_costs) == len(rep.op_costs), ctx
+    for a, b in zip(ref.op_costs, rep.op_costs):
+        assert a == b, (ctx, a.name)                    # incl. start/end
+
+
+_WORKLOADS = {
+    "resnet18": lambda: resnet18(32),
+    "lm-whisper": lambda: lm_workload(get_config("whisper-medium"),
+                                      seq_len=16),
+}
+
+
+@pytest.mark.parametrize("wl_name", sorted(_WORKLOADS))
+@pytest.mark.parametrize("spec_name,spec", [
+    ("row-block", row_block(0.8, 16)),
+    ("hybrid-1:2", hybrid(2, 16, 0.8)),
+    ("dense", None),
+])
+@pytest.mark.parametrize("strategy", ["spatial", "duplicate"])
+def test_monolithic_matches_pre_scheduler_bit_for_bit(arch4, wl_name,
+                                                      spec_name, spec,
+                                                      strategy):
+    m = default_mapping(arch4, strategy)
+
+    def wl():
+        w = _WORKLOADS[wl_name]()
+        return w.set_sparsity(spec) if spec is not None else w
+
+    ref = simulate_reference(arch4, wl(), m)
+    for sched in (None, SchedulePolicy()):
+        rep = simulate(arch4, wl(), m, schedule=sched)
+        _assert_reports_identical(ref, rep, (wl_name, spec_name, strategy))
+        assert rep.schedule is not None
+        assert rep.schedule.policy == "monolithic"
+        assert rep.schedule.makespan_cycles == rep.latency_cycles
+        assert rep.schedule.concurrency == 1.0
+    assert ref.schedule is None                # the reference builds none
+
+
+def test_monolithic_matches_reference_conv_only_scope():
+    """eval_scope='conv_only' ops are dependency-only in the schedule."""
+    arch = mars_arch()
+    m = default_mapping(arch, "duplicate")
+    wl_fn = lambda: resnet18(32).set_sparsity(row_block(0.75, 16))  # noqa: E731
+    ref = simulate_reference(arch, wl_fn(), m)
+    rep = simulate(arch, wl_fn(), m)
+    _assert_reports_identical(ref, rep, "conv_only")
+
+
+def test_monolithic_serial_placement(arch4):
+    rep = simulate(arch4, resnet18(32).set_sparsity(row_block(0.8, 16)),
+                   default_mapping(arch4))
+    cum = 0.0
+    for oc in rep.op_costs:
+        assert oc.start_cycle == cum
+        cum = cum + oc.latency_cycles
+        assert oc.end_cycle == cum
+    assert cum == rep.latency_cycles
+
+
+# ---------------------------------------------------------------------------
+# Partitioned: strictly faster on branchy DAGs, dynamic energy identical.
+# ---------------------------------------------------------------------------
+
+def _dyn(rep):
+    return {k: v for k, v in rep.energy_pj.items() if k != "static"}
+
+
+def _assert_valid_schedule(wl, sched, n_macros):
+    placed = {s.name: s for s in sched.ops}
+    assert sorted(placed) == sorted(wl.nodes)
+    for node in wl.nodes.values():
+        for inp in node.inputs:            # data deps respected
+            assert placed[node.name].start >= placed[inp].end
+    events = []
+    for s in sched.ops:                    # macro capacity respected
+        if s.macros and s.end > s.start:
+            events.append((s.start, s.macros))
+            events.append((s.end, -s.macros))
+    in_use = 0
+    for _, delta in sorted(events):        # releases sort before acquires
+        in_use += delta
+        assert in_use <= n_macros
+
+
+@pytest.mark.parametrize("wl_name,n_macros", [
+    ("resnet18", 4),        # shortcut convs overlap on the 4-macro org
+    ("lm-whisper", 16),     # Q/K/V are half-org ops on the 16-macro org
+])
+def test_partitioned_faster_same_dynamic_energy(wl_name, n_macros):
+    arch = usecase_arch(n_macros)
+    wl_fn = lambda: _WORKLOADS[wl_name]().set_sparsity(row_block(0.8, 16))  # noqa: E731
+    m = default_mapping(arch, "spatial")
+    mono = simulate(arch, wl_fn(), m)
+    part = simulate(arch, wl_fn(), m,
+                    schedule=SchedulePolicy("partitioned"))
+    # strictly lower total latency (independent branches overlap) ...
+    assert part.latency_cycles < mono.latency_cycles, wl_name
+    # ... within the accounting identity: same access counts, reshuffled
+    # in time — every dynamic-energy entry is bit-identical, and static
+    # energy shrinks with the shorter schedule
+    assert _dyn(part) == _dyn(mono), wl_name
+    assert part.energy_pj["static"] < mono.energy_pj["static"]
+    assert part.utilization == mono.utilization
+    assert [a.latency_cycles for a in part.op_costs] == \
+        [b.latency_cycles for b in mono.op_costs]
+    s = part.schedule
+    assert s.concurrency > 1.0
+    assert s.makespan_cycles >= s.critical_path_cycles > 0.0
+    assert s.critical_path
+    _assert_valid_schedule(wl_fn(), s, arch.n_macros)
+
+
+def test_partitioned_overlaps_qkv(arch16):
+    """Whisper-scale attention projections are half-org ops: Q and K run
+    concurrently in the partitioned schedule."""
+    wl = lm_workload(get_config("whisper-medium"), seq_len=16)
+    wl.set_sparsity(row_block(0.8, 16))
+    rep = simulate(arch16, wl, default_mapping(arch16, "spatial"),
+                   schedule=SchedulePolicy("partitioned"))
+    s = rep.schedule
+    q, k = s.op("attn_q"), s.op("attn_k")
+    assert q.start == k.start                 # same ready time, both fit
+    assert q.macros + k.macros <= arch16.n_macros
+    assert 0.0 < q.macro_share < 1.0
+
+
+def test_partitioned_chain_degenerates_to_monolithic(arch16):
+    """A pure chain has no branch to overlap: same makespan as serial."""
+    wl = _mlp_stack()
+    m = default_mapping(arch16, "spatial")
+    mono = simulate(arch16, wl, m)
+    part = simulate(arch16, wl, m, schedule=SchedulePolicy("partitioned"))
+    assert part.latency_cycles == mono.latency_cycles
+
+
+# ---------------------------------------------------------------------------
+# Resident: preload hoisting + invocation amortisation, safe fallback.
+# ---------------------------------------------------------------------------
+
+def test_resident_fits_and_amortises(arch16):
+    m = default_mapping(arch16, "spatial")
+    mono1 = simulate(arch16, _mlp_stack(), m,
+                     schedule=SchedulePolicy("monolithic", invocations=1))
+    res1 = simulate(arch16, _mlp_stack(), m,
+                    schedule=SchedulePolicy("resident", invocations=1))
+    assert res1.schedule.resident
+    assert res1.schedule.preload_cycles > 0.0
+    # one invocation: the hoisted preload exactly offsets the per-op
+    # load stages — no gain, no loss
+    assert res1.latency_cycles == pytest.approx(mono1.latency_cycles,
+                                                rel=1e-12)
+    mono8 = simulate(arch16, _mlp_stack(), m,
+                     schedule=SchedulePolicy("monolithic", invocations=8))
+    res8 = simulate(arch16, _mlp_stack(), m,
+                    schedule=SchedulePolicy("resident", invocations=8))
+    # invocations scale the monolithic walk linearly ...
+    assert mono8.latency_cycles == pytest.approx(8 * mono1.latency_cycles,
+                                                 rel=1e-12)
+    # ... while resident pays the load waves once and pulls ahead
+    assert res8.latency_cycles < mono8.latency_cycles
+    # weight traffic pinned: first invocation's cost, not 8x
+    assert res8.energy_pj["weight_buf"] == res1.energy_pj["weight_buf"]
+    assert mono8.energy_pj["weight_buf"] == pytest.approx(
+        8 * mono1.energy_pj["weight_buf"], rel=1e-12)
+    # stored-once index metadata is pinned too (streams still recur)
+    assert res8.energy_pj["index_mem"] < mono8.energy_pj["index_mem"]
+    # compute recurs every invocation regardless of residency
+    assert res8.energy_pj["cim_array"] == mono8.energy_pj["cim_array"]
+
+
+def test_resident_pins_only_weight_traffic_on_unified_buffer():
+    """MARS routes weights AND activations through one ``global_buf``:
+    the resident pin must amortise only the weight fill/loads, never the
+    per-invocation input reads / output writes / partial-sum spills that
+    share the buffer's name."""
+    arch = mars_arch()                        # unified ping-pong global_buf
+    m = default_mapping(arch, "spatial")
+
+    def wl_fn():
+        wl = Workload("convchain")
+        prev, hw = (), 8
+        for i in range(3):
+            node, hw = wl.conv(f"c{i}", 16 if i == 0 else 64, 64, hw,
+                               k=3, inputs=prev)
+            prev = (node.name,)
+        return wl.set_sparsity(row_block(0.75, 16))
+
+    res1 = simulate(arch, wl_fn(), m,
+                    schedule=SchedulePolicy("resident", invocations=1))
+    res8 = simulate(arch, wl_fn(), m,
+                    schedule=SchedulePolicy("resident", invocations=8))
+    mono8 = simulate(arch, wl_fn(), m,
+                     schedule=SchedulePolicy("monolithic", invocations=8))
+    assert res1.schedule.resident and res8.schedule.resident
+    # activation traffic recurs every invocation ...
+    assert res8.energy_pj["global_buf"] > res1.energy_pj["global_buf"]
+    # ... while the weight portion is paid once, so resident stays
+    # strictly below monolithic's reload-every-pass total
+    assert res8.energy_pj["global_buf"] < mono8.energy_pj["global_buf"]
+
+
+def test_resident_falls_back_bit_for_bit(arch4):
+    """resnet18's aggregate band demand exceeds a 4-macro org: resident
+    must degrade to exactly the monolithic numbers, flagged."""
+    wl_fn = lambda: resnet18(32).set_sparsity(row_block(0.8, 16))  # noqa: E731
+    m = default_mapping(arch4, "spatial")
+    mono = simulate(arch4, wl_fn(), m)
+    res = simulate(arch4, wl_fn(), m, schedule=SchedulePolicy("resident"))
+    assert res.schedule.resident is False
+    assert res.schedule.preload_cycles == 0.0
+    _assert_reports_identical(mono, res, "resident-fallback")
+
+
+def test_invocations_scale_dense_comparisons(arch16):
+    """Speedup vs a same-policy dense baseline stays meaningful at any
+    invocation count."""
+    wl = _mlp_stack()
+    m = default_mapping(arch16, "spatial")
+    sched = SchedulePolicy("resident", invocations=4)
+    rep = simulate(arch16, wl, m, schedule=sched)
+    dense = dense_baseline(arch16, wl, m, schedule=sched)
+    assert dense.latency_cycles > rep.latency_cycles
+
+
+# ---------------------------------------------------------------------------
+# build_schedule guard rails.
+# ---------------------------------------------------------------------------
+
+def test_build_schedule_empty_workload():
+    wl = Workload("empty")
+    res = build_schedule(wl, SchedulePolicy("partitioned"), {},
+                         n_macros=4, band_slots=128)
+    assert res.makespan_cycles == 0.0 and res.ops == []
+
+
+def test_build_schedule_zero_duration_ops_keep_order():
+    wl = _diamond()
+    execs = {n: OpExec(name=n, duration=0.0) for n in wl.nodes}
+    res = build_schedule(wl, SchedulePolicy("partitioned"), execs,
+                         n_macros=4, band_slots=128)
+    assert res.makespan_cycles == 0.0
+    assert {s.name for s in res.ops} == set(wl.nodes)
+
+
+# ---------------------------------------------------------------------------
+# Exploration plumbing: job keys, schedule sweep, CLI.
+# ---------------------------------------------------------------------------
+
+def test_cache_schema_bumped_for_schedule_field():
+    assert CACHE_SCHEMA == 4
+
+
+def test_job_key_includes_schedule_policy(arch4):
+    m = default_mapping(arch4)
+    wl = resnet18(32).set_sparsity(row_block(0.8, 16))
+    j0 = ExploreJob.simulate(arch4, wl, m)
+    j1 = ExploreJob.simulate(arch4, wl, m,
+                             schedule=SchedulePolicy("partitioned"))
+    j2 = ExploreJob.simulate(arch4, wl, m,
+                             schedule=SchedulePolicy("partitioned",
+                                                     invocations=2))
+    assert len({j0.key, j1.key, j2.key}) == 3
+    # the explicit default normalises onto the None spelling
+    j3 = ExploreJob.simulate(arch4, wl, m, schedule=SchedulePolicy())
+    assert j3.schedule is None and j3.key == j0.key
+    d0 = ExploreJob.dense(arch4, wl, m)
+    d1 = ExploreJob.dense(arch4, wl, m, schedule=SchedulePolicy())
+    d2 = ExploreJob.dense(arch4, wl, m,
+                          schedule=SchedulePolicy("partitioned"))
+    assert d0.key == d1.key != d2.key
+
+
+def test_schedule_sweep_rows(arch4):
+    res = schedule_sweep(arch4, lambda: resnet18(32), row_block(0.8, 16),
+                         policies=("monolithic", "partitioned"),
+                         workers=1)
+    assert len(res.rows) == 2
+    by = {r["schedule"]: r for r in res.rows}
+    assert set(by) == {"monolithic", "partitioned"}
+    assert by["partitioned"]["latency_ms"] < by["monolithic"]["latency_ms"]
+    assert by["monolithic"]["invocations"] == 1
+
+
+def test_explore_cli_schedule_axis(arch4, capsys):
+    from repro.explore.__main__ import main
+    rc = main(["sparsity", "--model", "resnet18", "--ratios", "0.8",
+               "--workers", "1", "--schedule", "monolithic,partitioned"])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "schedule" in out and "partitioned" in out
+
+
+def test_explore_cli_rejects_unknown_policy():
+    from repro.explore.__main__ import main
+    with pytest.raises(SystemExit):
+        main(["sparsity", "--model", "resnet18", "--ratios", "0.8",
+              "--schedule", "bogus"])
+
+
+# ---------------------------------------------------------------------------
+# Perf gate: suites absent from the baseline are informational.
+# ---------------------------------------------------------------------------
+
+def _load_compare():
+    sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+    try:
+        return importlib.import_module("benchmarks.compare")
+    finally:
+        sys.path.pop(0)
+
+
+def test_compare_new_suite_is_informational():
+    cmp_mod = _load_compare()
+    base = {"suites": {"a": {"ok": True, "wall_s": 1.0}}}
+    cur = {"suites": {"a": {"ok": True, "wall_s": 1.1},
+                      "schedule": {"ok": True, "wall_s": 99.0}}}
+    failures, rows = cmp_mod.compare_summaries(base, cur)
+    assert failures == []                     # +10% within budget; new
+    new = next(r for r in rows if r["suite"] == "schedule")
+    assert "informational" in new["delta"]
+    total = next(r for r in rows if r["suite"] == "TOTAL")
+    assert total["current_s"] == pytest.approx(1.1)   # new suite excluded
+
+
+def test_compare_existing_thresholds_not_weakened():
+    cmp_mod = _load_compare()
+    base = {"suites": {"a": {"ok": True, "wall_s": 1.0}}}
+    cur = {"suites": {"a": {"ok": True, "wall_s": 2.0},
+                      "schedule": {"ok": True, "wall_s": 0.1}}}
+    failures, _ = cmp_mod.compare_summaries(base, cur)
+    assert any("regressed" in f for f in failures)
