@@ -5,6 +5,7 @@
   sparsity_exploration paper Fig. 8–10 / Tab II (§VII-B use-case)
   mapping_exploration  paper Fig. 11–12         (§VII-C use-case)
   schedule_exploration paper §IV use-case 2     (multi-macro scheduling)
+  traced_lm            traced-DAG pipeline      (fixture replay, jax-free)
 
 Usage:  PYTHONPATH=src python -m benchmarks.run [--only NAME] [--csv FILE]
                                                 [--workers N] [--json [FILE]]
@@ -37,7 +38,7 @@ import time
 from typing import Dict, List
 
 from . import (mapping_exploration, runtime_analysis, schedule_exploration,
-               sparsity_exploration, validation)
+               sparsity_exploration, traced_lm, validation)
 
 SUITES = {
     "validation": validation.run,
@@ -45,6 +46,7 @@ SUITES = {
     "sparsity": sparsity_exploration.run,
     "mapping": mapping_exploration.run,
     "schedule": schedule_exploration.run,
+    "traced_lm": traced_lm.run,
 }
 
 # suites built on the repro.explore engine accept a worker count

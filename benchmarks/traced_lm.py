@@ -1,0 +1,95 @@
+"""Traced-workload pipeline benchmark (jax-free, informational).
+
+Replays the committed golden TraceGraphs under ``tests/fixtures/trace/``
+through the full modeling pipeline — load → lower → differential vs the
+hand DAG → simulate — and reports the cost of each stage.  No jax and no
+live capture: this measures the half of :mod:`repro.trace` that every
+consumer (tests, CI, the explore cache) actually runs, on inputs pinned
+in-tree.
+
+Rows:
+
+* ``lower/<fixture>``      — TraceGraph → Workload lowering latency,
+  with the op count and MVM macs of the result.
+* ``diff/<fixture>``       — hand-sibling rebuild + differential; the
+  ``mvm_match`` field is the contract the trace-smoke CI job gates on.
+* ``simulate/<fixture>/<policy>`` — the lowered DAG through the cost
+  model under each schedule policy.
+
+The suite is new relative to older baselines, so ``compare.py`` reports
+it as informational until a refreshed ``BENCH_baseline.json`` lands.
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Dict, List
+
+from repro.configs import get_config
+from repro.core import (SchedulePolicy, default_mapping, lm_workload,
+                        simulate, usecase_arch)
+from repro.core.schedule import POLICIES
+from repro.core.workload import MODEL_BUILDERS
+from repro.trace import TraceGraph, diff_workloads, lower_graph
+
+__all__ = ["run"]
+
+FIXTURE_DIR = os.path.join(os.path.dirname(__file__), os.pardir,
+                           "tests", "fixtures", "trace")
+
+# (fixture, has a hand sibling to diff against)
+FIXTURES = (
+    ("lm_llama3-8b_forward.json", True),
+    ("lm_llama3-8b_decode.json", False),
+    ("lm_dbrx-132b_forward.json", True),
+    ("cnn_resnet18_32.json", True),
+)
+SIMULATED = ("lm_llama3-8b_forward.json", "cnn_resnet18_32.json")
+
+
+def _hand_for(graph: TraceGraph):
+    meta = graph.meta
+    if "config" in meta:
+        return lm_workload(get_config(meta["config"]),
+                           seq_len=int(meta["seq_len"]),
+                           batch=int(meta["batch"]))
+    return MODEL_BUILDERS[meta["model"]](int(meta["img"]),
+                                         int(meta["num_classes"]))
+
+
+def run() -> List[Dict]:
+    rows: List[Dict] = []
+    arch = usecase_arch(16)
+    mapping = default_mapping(arch, "spatial")
+
+    for fname, diffable in FIXTURES:
+        path = os.path.join(FIXTURE_DIR, fname)
+        stem = fname[:-len(".json")]
+        graph = TraceGraph.load(path)
+
+        t0 = time.perf_counter()
+        wl = lower_graph(graph)
+        dt = time.perf_counter() - t0
+        rows.append({"name": f"lower/{stem}", "us_per_call": dt * 1e6,
+                     "ops": len(wl), "mvm_macs": wl.total_macs(),
+                     "digest": graph.digest()[:16]})
+
+        if diffable:
+            t0 = time.perf_counter()
+            d = diff_workloads(wl, _hand_for(graph))
+            dt = time.perf_counter() - t0
+            rows.append({"name": f"diff/{stem}", "us_per_call": dt * 1e6,
+                         "mvm_match": d["mvm_match"],
+                         "elementwise_surplus": d["elementwise_surplus"]})
+
+        if fname in SIMULATED:
+            for pol in POLICIES:
+                wl_pol = lower_graph(graph)
+                t0 = time.perf_counter()
+                rep = simulate(arch, wl_pol, mapping,
+                               schedule=SchedulePolicy(pol))
+                dt = time.perf_counter() - t0
+                rows.append({"name": f"simulate/{stem}/{pol}",
+                             "us_per_call": dt * 1e6,
+                             "latency_ms": round(rep.latency_ms, 4)})
+    return rows

@@ -44,6 +44,7 @@ from .mapping import (MappingSpec, TileGridCache, _band_stats_loop,
                       reshape_and_compress)
 from .report import CostReport, OpCost
 from .schedule import OpExec, SchedulePolicy, build_schedule
+from . import workload as _workload
 from .workload import OpNode, Workload
 
 __all__ = ["simulate", "simulate_reference", "dense_baseline", "dense_twin",
@@ -60,9 +61,16 @@ def op_class(op: OpNode) -> str:
     kernel), every other MVM — including the ``attn_{q,k,v,o}``
     projections, which are plain ``fc`` GEMMs executed by the matmul
     kernels — and everything else on the post-processing unit.
+
+    Traced workloads (:mod:`repro.trace`) emit activation×activation
+    matmuls under generated names, so weight-free matmuls classify as
+    attention regardless of naming — in the hand DAGs the only
+    weight-free matmuls are the ``attn_*`` score/context GEMMs, so this
+    is a pure generalisation.
     """
     if op.is_mvm or op.kind == "dwconv":
-        if op.kind == "matmul" and op.name.startswith("attn"):
+        if op.kind == "matmul" and (op.weights == 0
+                                    or op.name.startswith("attn")):
             return "attention"
         return "matmul"
     return "post_proc"
@@ -403,13 +411,19 @@ def _mvm_op_cost(
 
 
 def _other_op_cost(op: OpNode, arch: CIMArch, acct: _OpLedger) -> OpCost:
-    """Non-MVM ops (pool / act / add / norm / embed) run on post_proc.
+    """Non-MVM ops (pool / act / add / norm / embed / …) run on post_proc.
 
     Buffer traffic is priced at the macro's activation width
     (``macro.input_bits``) — post-processing consumes/produces the same
     quantised activations the arrays chew, so 4-bit / 16-bit arch sweeps
     see consistently scaled post-proc traffic.
+
+    Kinds outside :data:`repro.core.workload.OTHER_KINDS` (traced graphs
+    surface fused elementwise primitives the hand DAGs never emit) warn
+    once and are priced exactly like plain elementwise work — an
+    explicit, visible fallback rather than a crash or silent zero.
     """
+    _workload.warn_unknown_kind(op.kind)
     post = arch.unit("post_proc")
     act_bits = float(arch.macro.input_bits)
     n = max(op.elements, 1)

@@ -21,9 +21,37 @@ from typing import Dict, Iterable, List, Optional, Tuple
 from .flexblock import FlexBlockSpec, dense_spec
 
 __all__ = ["OpNode", "Workload", "vgg16", "resnet18", "resnet50",
-           "mobilenet_v2", "lm_workload", "MODEL_BUILDERS"]
+           "mobilenet_v2", "lm_workload", "MODEL_BUILDERS", "MVM_KINDS",
+           "OTHER_KINDS", "warn_unknown_kind"]
 
 MVM_KINDS = ("conv", "fc", "matmul")
+
+# Non-MVM kinds the cost model prices on the post-processing unit.  The
+# hand builders emit the first five; traced graphs (repro.trace) also
+# surface the rest.  Kinds outside this vocabulary are priced as plain
+# elementwise work after a one-time warning (see warn_unknown_kind) —
+# an explicit fallback instead of mispricing or crashing.
+OTHER_KINDS = frozenset({
+    "pool", "act", "add", "norm", "embed",
+    "softmax", "reduce", "sort", "gather", "scatter", "elementwise",
+})
+
+_warned_kinds: set = set()
+
+
+def warn_unknown_kind(kind: str) -> bool:
+    """True (with a once-per-kind RuntimeWarning) for op kinds outside
+    the priced vocabulary; callers fall back to elementwise pricing."""
+    import warnings
+
+    if kind in MVM_KINDS or kind == "dwconv" or kind in OTHER_KINDS:
+        return False
+    if kind not in _warned_kinds:
+        _warned_kinds.add(kind)
+        warnings.warn(
+            f"unknown op kind {kind!r}: pricing as elementwise on the "
+            "post-processing unit", RuntimeWarning, stacklevel=3)
+    return True
 
 
 @dataclasses.dataclass
@@ -72,6 +100,10 @@ class Workload:
     def __init__(self, name: str):
         self.name = name
         self.nodes: Dict[str, OpNode] = {}
+        # content digest of the traced program this DAG was lowered from
+        # (repro.trace); None for hand-built workloads.  Part of the
+        # explore-cache key so traced DAGs are addressed by program.
+        self.source_digest: Optional[str] = None
 
     # -- construction --------------------------------------------------------
     def add(self, node: OpNode) -> OpNode:
@@ -350,16 +382,26 @@ def lm_workload(cfg, *, seq_len: int = 128, batch: int = 1) -> Workload:
         # V = heads × layers × batch × seq_len — spelled out explicitly
         # (the old `n_heads * v * L // seq_len * seq_len` relied on
         # left-to-right // precedence to cancel the seq_len factor).
-        w.add(OpNode(name="attn_scores", kind="matmul", inputs=(q.name, k.name),
-                     K=head_dim, N=seq_len,
-                     V=cfg.n_heads * batch * L * seq_len,
-                     prunable=False, weight_count=0))
-        o = w.fc("attn_o", q_out, d, inputs=(vv.name,), v=v * L)
+        sc = w.add(OpNode(name="attn_scores", kind="matmul",
+                          inputs=(q.name, k.name),
+                          K=head_dim, N=seq_len,
+                          V=cfg.n_heads * batch * L * seq_len,
+                          prunable=False, weight_count=0))
+        # context matmul (probs·V): same volume shape as the score GEMM
+        # transposed — seq_len-deep reduction producing head_dim columns
+        # for every (head, layer, batch, query) vector.  The historical
+        # DAG omitted it, undercounting attention MACs by half; the
+        # traced-model differential harness (repro.trace) pinned it.
+        ctx = w.add(OpNode(name="attn_ctx", kind="matmul",
+                           inputs=(sc.name, vv.name),
+                           K=seq_len, N=head_dim,
+                           V=cfg.n_heads * batch * L * seq_len,
+                           prunable=False, weight_count=0))
+        o = w.fc("attn_o", q_out, d, inputs=(ctx.name,), v=v * L)
         prev = (o.name,)
     if cfg.n_experts > 1:
         # MoE: top-k experts active per token; V scales by top_k
         g = w.fc("moe_gate", d, cfg.n_experts, inputs=prev, v=v * L)
-        up_names = []
         n_up = 2 if cfg.gated_mlp else 1
         up = w.fc("expert_up", d, cfg.d_ff * n_up, inputs=(g.name,),
                   v=v * L * cfg.top_k)

@@ -152,6 +152,33 @@ def _runner(args: argparse.Namespace) -> SweepRunner:
     return SweepRunner(workers=args.workers, cache=cache)
 
 
+def _traced_wl_fn(ap: argparse.ArgumentParser, spec: str, seq_len: int):
+    """Parse ``traced:<config>[:<step>]`` into a fresh-workload factory.
+
+    The trace runs once (it needs jax); every sweep evaluation gets a
+    deep copy so per-job ``set_sparsity`` mutations never alias.  The
+    lowered DAG carries ``source_digest``, which :func:`job.canonical`
+    folds into every content key.
+    """
+    parts = spec.split(":")
+    if parts[0] != "traced" or len(parts) not in (2, 3) or not parts[1]:
+        ap.error(f"--workload expects 'traced:<config>[:<step>]', "
+                 f"got {spec!r}")
+    step = parts[2] if len(parts) == 3 else "forward"
+    try:
+        from ..trace import traced_workload
+        base = traced_workload(parts[1], step=step, seq_len=seq_len)
+    except ImportError:
+        ap.error("--workload traced:… needs jax to capture the model; "
+                 "install it or sweep a hand-built workload instead")
+    except (KeyError, ValueError) as e:
+        ap.error(f"--workload {spec!r}: {e}")
+    import copy
+    print(f"traced workload {base.name!r}: {len(base)} ops, "
+          f"digest {base.source_digest[:16]}")
+    return lambda: copy.deepcopy(base)
+
+
 def main(argv: Optional[List[str]] = None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.explore",
@@ -176,6 +203,12 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--config", default="llama3-8b",
                     help="LM config name (lm sweep)")
     ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--workload", default=None, metavar="SPEC",
+                    help="override the swept workload with a traced DAG: "
+                         "'traced:<config>[:<step>]' lowers the config's "
+                         "jaxpr (repro.trace, needs jax; step defaults to "
+                         "forward) instead of a hand-built model — cached "
+                         "results are keyed by the jaxpr content digest")
     ap.add_argument("--workers", type=int, default=None,
                     help="worker processes (default: one per CPU; 1 = serial)")
     ap.add_argument("--cache-dir", default=None,
@@ -230,17 +263,21 @@ def main(argv: Optional[List[str]] = None) -> int:
 
     runner = _runner(args)
     ratios = _parse_floats(ap, args.ratios)
+    wl_override = (_traced_wl_fn(ap, args.workload, args.seq_len)
+                   if args.workload else None)
 
     def run_sweep(prof, sched):
         if args.sweep == "sparsity":
             arch = PRESET_ARCHS[args.arch]() if args.arch else usecase_arch(4)
-            wl_fn = lambda: MODEL_BUILDERS[args.model](args.img)  # noqa: E731
+            wl_fn = (wl_override or
+                     (lambda: MODEL_BUILDERS[args.model](args.img)))
             return sparsity_sweep(
                 arch, wl_fn, {}, ratios=ratios, runner=runner, profile=prof,
                 schedule=sched,
                 pattern_factory=lambda r: TABLE_II_PATTERNS(r, c_in=16))
         if args.sweep == "mapping":
-            wl_fn = lambda: MODEL_BUILDERS[args.model](args.img)  # noqa: E731
+            wl_fn = (wl_override or
+                     (lambda: MODEL_BUILDERS[args.model](args.img)))
             rearrange = [None if t == "none" else t
                          for t in args.rearrange.split(",") if t]
             if args.arch:
@@ -259,7 +296,8 @@ def main(argv: Optional[List[str]] = None) -> int:
         from ..configs import get_config
         cfg = get_config(args.config)
         arch = PRESET_ARCHS[args.arch]() if args.arch else usecase_arch(16)
-        wl_fn = lambda: lm_workload(cfg, seq_len=args.seq_len)  # noqa: E731
+        wl_fn = (wl_override or
+                 (lambda: lm_workload(cfg, seq_len=args.seq_len)))
         return sparsity_sweep(
             arch, wl_fn, {}, ratios=ratios, runner=runner, profile=prof,
             schedule=sched,

@@ -40,7 +40,10 @@ __all__ = ["ExploreJob", "canonical", "content_key", "CACHE_SCHEMA"]
 # 4: jobs grew a schedule-policy field (repro.core.schedule); reports
 #    carry ScheduleResult/per-op placement fields and the index-capacity
 #    check dropped its spurious 64x slack.
-CACHE_SCHEMA = 4
+# 5: workloads carry source_digest (repro.trace): traced DAGs are keyed
+#    by the jaxpr content digest of the program they were lowered from,
+#    and lm_workload grew the attention context matmul (attn_ctx).
+CACHE_SCHEMA = 5
 
 
 @functools.lru_cache(maxsize=None)
@@ -115,7 +118,7 @@ def canonical(obj) -> object:
     if isinstance(obj, dict):
         return ["dict", sorted((str(k), canonical(v)) for k, v in obj.items())]
     if isinstance(obj, Workload):
-        return ["Workload", obj.name,
+        return ["Workload", obj.name, obj.source_digest,
                 [(name, canonical(node)) for name, node in obj.nodes.items()]]
     raise TypeError(f"cannot canonicalise {type(obj).__name__!r} for job keying")
 

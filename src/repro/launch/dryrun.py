@@ -406,6 +406,32 @@ def run_cell(arch: str, cell_name: str, mesh_kind: str, *,
     return rec
 
 
+def _emit_trace(arch: str, cell: ShapeCell, out: str) -> Dict[str, Any]:
+    """Capture the modeling-plane traced DAG for this cell and save it
+    next to the ledger (``<out dir>/trace/<arch>_<cell>.json``).
+
+    The returned fields join the measured HLO row to its modeling-plane
+    sibling by content: the TraceGraph digest keys explore-cache entries
+    for ``--workload traced:<arch>`` sweeps, and the lowered MVM totals
+    are the analytic counterpart of the record's XLA ``flops``.
+    """
+    from ..trace import lower_graph, trace_model
+    from ..trace.diff import summarize
+
+    step = {"train": "forward"}.get(cell.kind, cell.kind)
+    graph = trace_model(get_config(arch), step=step, seq_len=cell.seq_len,
+                        batch=cell.global_batch)
+    tdir = os.path.join(os.path.dirname(out) or ".", "trace")
+    os.makedirs(tdir, exist_ok=True)
+    path = os.path.join(tdir, f"{arch}_{cell.name}.json")
+    graph.save(path)
+    wl = lower_graph(graph)
+    s = summarize(wl)
+    return {"trace_path": path, "trace_digest": graph.digest(),
+            "trace_ops": len(wl), "trace_mvm_macs": s["mvm_macs"],
+            "trace_mvm_weights": s["mvm_weights"]}
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default=None, help="architecture id")
@@ -421,6 +447,11 @@ def main(argv=None) -> int:
                          "zero inputs and record best wall-clock as "
                          "time_s (allocates the real footprint; feeds "
                          "repro.calibrate)")
+    ap.add_argument("--emit-trace", action="store_true",
+                    help="also capture the modeling-plane traced DAG "
+                         "(repro.trace) per cell, save the graph JSON "
+                         "under <out dir>/trace/, and stamp its content "
+                         "digest + MVM totals into the ledger record")
     ap.add_argument("--tag", default="")
     # sharding-strategy knobs (§Perf hillclimb)
     ap.add_argument("--fsdp", action="store_true",
@@ -496,6 +527,11 @@ def main(argv=None) -> int:
                            extra_tag=args.tag, remat_policy=args.remat_policy,
                            ffn_compress=args.ffn_compress,
                            execute=args.execute)
+            if args.emit_trace:
+                rec.update(_emit_trace(arch, SHAPE_CELLS[cell_name], args.out))
+                print(f"    trace: {rec['trace_path']} "
+                      f"digest={rec['trace_digest'][:16]} "
+                      f"mvm_macs={rec['trace_mvm_macs']:.3e}", flush=True)
             timed = (f" time={rec['time_s']:.3f}s" if "time_s" in rec else "")
             print(f"    flops={rec['flops']:.3e} bytes={rec['bytes_accessed']:.3e} "
                   f"coll={sum(v for k, v in rec['collective_bytes'].items() if k != 'count'):.3e} "

@@ -1,0 +1,32 @@
+"""Compiler front end for the modeling plane (CIMFlow-style).
+
+Auto-lowers traced jax models into :class:`~repro.core.workload.Workload`
+DAGs so every config in :mod:`repro.configs` becomes a CIM scenario
+without hand modeling:
+
+* :mod:`repro.trace.ir` — jax-free, JSON-serialisable jaxpr mirror
+  (:class:`TraceGraph`), content-digested for explore-cache keying.
+* :mod:`repro.trace.capture` — ``jax.make_jaxpr`` → TraceGraph (the only
+  jax-touching module, imported lazily at call time).
+* :mod:`repro.trace.lower` — TraceGraph → Workload (jax-free; the
+  committed fixtures under ``tests/fixtures/trace/`` replay through it
+  in the no-jax CI job).
+* :mod:`repro.trace.diff` — traced-vs-hand differential reports.
+
+``python -m repro.trace lower|diff|fixture`` drives it from the shell;
+``python -m repro.explore … --workload traced:<config>`` sweeps a traced
+DAG through the exploration engine.  See ``docs/tracing.md``.
+"""
+from .capture import TRACE_STEPS, capture, trace_model, traced_cnn, \
+    traced_workload
+from .diff import diff_table, diff_workloads, summarize
+from .ir import TraceEqn, TraceGraph, TraceVar
+from .lower import LowerError, lower_graph
+
+__all__ = [
+    "TraceVar", "TraceEqn", "TraceGraph",
+    "lower_graph", "LowerError",
+    "capture", "trace_model", "traced_workload", "traced_cnn",
+    "TRACE_STEPS",
+    "summarize", "diff_workloads", "diff_table",
+]

@@ -1,0 +1,209 @@
+"""``python -m repro.trace`` — capture / lower / diff traced workloads.
+
+Subcommands:
+
+* ``lower``   — lower a saved TraceGraph fixture (``--graph``, jax-free)
+  or a live trace (``--config``/``--cnn``, needs jax) into a Workload;
+  print the op table, optionally simulate it under every schedule policy
+  (``--simulate``) and save the graph JSON (``--save-graph``).
+* ``diff``    — same sources, then diff against the hand-built sibling
+  DAG (:func:`lm_workload` / the CNN builders).  Exits non-zero when the
+  MVM totals disagree — the check the ``trace-smoke`` CI job gates on.
+* ``fixture`` — regenerate the golden fixtures under
+  ``tests/fixtures/trace/`` (needs jax; run after changing capture or
+  the reference programs, commit the result).
+
+Examples::
+
+    python -m repro.trace diff --graph tests/fixtures/trace/lm_llama3-8b_forward.json
+    python -m repro.trace lower --config dbrx-132b --step decode --simulate
+    python -m repro.trace diff --cnn resnet18 --img 32
+    python -m repro.trace fixture --out tests/fixtures/trace
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import List, Optional
+
+from ..core import (SchedulePolicy, default_mapping, lm_workload, simulate,
+                    usecase_arch)
+from ..core.schedule import POLICIES
+from ..core.workload import MODEL_BUILDERS, Workload
+from .diff import diff_table, diff_workloads
+from .ir import TraceGraph
+from .lower import lower_graph
+
+# the committed golden set: (kind, config/model, step) — one LM config
+# per step kind plus one CNN, small shapes so the JSON stays reviewable
+FIXTURES = (
+    ("lm", "llama3-8b", "forward"),
+    ("lm", "llama3-8b", "prefill"),
+    ("lm", "llama3-8b", "decode"),
+    ("lm", "dbrx-132b", "forward"),
+    ("cnn", "resnet18", None),
+)
+FIXTURE_SEQ_LEN = 8
+FIXTURE_BATCH = 1
+FIXTURE_IMG = 32
+
+
+def fixture_name(kind: str, model: str, step: Optional[str]) -> str:
+    return (f"lm_{model}_{step}.json" if kind == "lm"
+            else f"cnn_{model}_{FIXTURE_IMG}.json")
+
+
+def _require_jax(ap, what: str):
+    try:
+        import jax  # noqa: F401
+    except ImportError:
+        ap.error(f"{what} requires jax; with no jax installed, use "
+                 "--graph with a committed fixture instead")
+
+
+def _load_workload(ap, args) -> Workload:
+    if args.graph:
+        return lower_graph(TraceGraph.load(args.graph))
+    if args.cnn:
+        _require_jax(ap, f"tracing --cnn {args.cnn}")
+        from .capture import traced_cnn
+        return traced_cnn(args.cnn, args.img, args.classes)
+    if args.config:
+        _require_jax(ap, f"tracing --config {args.config}")
+        from .capture import trace_model
+        from ..configs import get_config
+        graph = trace_model(get_config(args.config), step=args.step,
+                            seq_len=args.seq_len, batch=args.batch,
+                            source=args.source)
+        if args.save_graph:
+            graph.save(args.save_graph)
+            print(f"saved graph to {args.save_graph} "
+                  f"(digest {graph.digest()[:16]})")
+        return lower_graph(graph)
+    ap.error("one of --graph / --config / --cnn is required")
+
+
+def _hand_sibling(ap, args, traced: Workload) -> Workload:
+    """Reconstruct the hand DAG the traced workload mirrors."""
+    if args.graph:
+        meta = TraceGraph.load(args.graph).meta
+        if "config" in meta:
+            from ..configs import get_config
+            if meta.get("step") == "decode":
+                ap.error("decode fixtures have no hand-DAG sibling to "
+                         "diff against (lm_workload models a full "
+                         "sequence); use 'lower --simulate' instead")
+            return lm_workload(get_config(meta["config"]),
+                               seq_len=int(meta.get("seq_len", 128)),
+                               batch=int(meta.get("batch", 1)))
+        builder = MODEL_BUILDERS[meta["model"].replace("_", "")]
+        return builder(int(meta.get("img", 32)),
+                       int(meta.get("num_classes", 100)))
+    if args.cnn:
+        key = args.cnn.replace("_", "")
+        return MODEL_BUILDERS[key](args.img, args.classes)
+    from ..configs import get_config
+    if args.step == "decode":
+        ap.error("step=decode has no hand-DAG sibling (see above)")
+    return lm_workload(get_config(args.config), seq_len=args.seq_len,
+                       batch=args.batch)
+
+
+def _print_workload(wl: Workload) -> None:
+    print(wl)
+    if wl.source_digest:
+        print(f"source digest: {wl.source_digest[:16]}")
+    print(f"{'op':30}{'kind':8}{'K':>8}{'N':>8}{'V':>12}"
+          f"{'elements':>12}{'weights':>14}")
+    for n in wl.nodes.values():
+        print(f"{n.name:30}{n.kind:8}{n.K:>8}{n.N:>8}{n.V:>12}"
+              f"{n.elements:>12}{n.weights:>14}")
+
+
+def _simulate_all(wl_src) -> None:
+    arch = usecase_arch(16)
+    mapping = default_mapping(arch, "spatial")
+    print(f"\n{'policy':14}{'cycles':>14}{'energy_uJ':>12}"
+          f"{'concurrency':>12}")
+    for pol in POLICIES:
+        rep = simulate(arch, wl_src(), mapping,
+                       schedule=SchedulePolicy(pol))
+        conc = rep.schedule.concurrency if rep.schedule else 1.0
+        print(f"{pol:14}{rep.latency_cycles:>14.0f}"
+              f"{rep.total_energy_uj:>12.3f}{conc:>12.2f}")
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.trace", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("cmd", choices=("lower", "diff", "fixture"))
+    ap.add_argument("--graph", default=None,
+                    help="saved TraceGraph JSON (jax-free replay)")
+    ap.add_argument("--config", default=None, help="LM config to trace")
+    ap.add_argument("--step", default="forward",
+                    choices=("forward", "prefill", "decode"))
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=1)
+    ap.add_argument("--source", default="reference",
+                    choices=("reference", "model"),
+                    help="'reference': shape-faithful mirror (MVM-exact "
+                         "vs the hand DAG); 'model': the real execution-"
+                         "plane transformer (diff is informational)")
+    ap.add_argument("--cnn", default=None,
+                    help="CNN reference to trace (vgg16/resnet18/resnet50)")
+    ap.add_argument("--img", type=int, default=32)
+    ap.add_argument("--classes", type=int, default=100)
+    ap.add_argument("--save-graph", default=None,
+                    help="also save the captured TraceGraph JSON here")
+    ap.add_argument("--simulate", action="store_true",
+                    help="simulate under every schedule policy")
+    ap.add_argument("--out", default="tests/fixtures/trace",
+                    help="fixture output directory (fixture cmd)")
+    args = ap.parse_args(argv)
+
+    if args.cmd == "fixture":
+        import os
+        _require_jax(ap, "regenerating fixtures")
+        from .capture import capture, trace_model
+        from .reference import cnn_program
+        from ..configs import get_config
+        os.makedirs(args.out, exist_ok=True)
+        for kind, model, step in FIXTURES:
+            if kind == "lm":
+                graph = trace_model(get_config(model), step=step,
+                                    seq_len=FIXTURE_SEQ_LEN,
+                                    batch=FIXTURE_BATCH)
+            else:
+                fn, params, fargs = cnn_program(model, img=FIXTURE_IMG)
+                graph = capture(
+                    fn, params, *fargs, name=f"{model}-{FIXTURE_IMG}",
+                    meta={"model": model, "img": FIXTURE_IMG,
+                          "num_classes": 100,
+                          "workload_name": f"traced-{model}-{FIXTURE_IMG}"})
+            path = os.path.join(args.out, fixture_name(kind, model, step))
+            graph.save(path)
+            print(f"wrote {path} (eqns={graph.n_eqns()}, "
+                  f"digest {graph.digest()[:16]})")
+        return 0
+
+    wl = _load_workload(ap, args)
+    if args.cmd == "lower":
+        _print_workload(wl)
+        if args.simulate:
+            _simulate_all(lambda: _load_workload(ap, args))
+        return 0
+
+    # diff
+    hand = _hand_sibling(ap, args, wl)
+    print(diff_table(wl, hand))
+    if args.simulate:
+        _simulate_all(lambda: _load_workload(ap, args))
+    d = diff_workloads(wl, hand)
+    if args.config and args.source == "model":
+        return 0          # execution-plane capture: informational only
+    return 0 if d["mvm_match"] else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,346 @@
+"""Shape-faithful reference programs for the differential trace harness.
+
+These are small, *traceable* jax programs whose MVM structure mirrors the
+hand-built DAGs (:func:`repro.core.workload.lm_workload` and the CNN
+builders) op for op: stacked per-layer weights scanned over ``n_layers``,
+top-k expert-gather MoE dispatch, GQA via K/V head repetition, fused
+gate+up MLP projections.  They exist so the tracer can be tested
+*differentially*: trace → lower → the MVM ``total_macs()`` /
+``total_weights()`` must equal the hand DAG bit-exactly.
+
+They are cost mirrors, not numerics mirrors — no causal masking, no
+RoPE, no flash-attention tiling, no MoE capacity factors.  That is the
+point: the hand DAGs model none of those either, so any disagreement is
+a lowering bug, not a modeling choice.  The real execution-plane model
+(``capture.trace_model(source="model")``) *does* tile and dispatch, and
+its traced DAG legitimately differs; ``repro.trace.diff`` reports that
+gap instead of asserting it away.
+
+Everything jax lives behind function bodies: importing this module does
+not import jax (the no-jax CI job imports the package).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+__all__ = ["reference_program", "cnn_program", "CNN_REFERENCES"]
+
+
+def _sds(shape, dtype_name="float32"):
+    import jax
+    import jax.numpy as jnp
+    return jax.ShapeDtypeStruct(tuple(shape), getattr(jnp, dtype_name))
+
+
+# ---------------------------------------------------------------------------
+# LM reference: mirrors lm_workload's per-layer block, scanned over L.
+# ---------------------------------------------------------------------------
+
+def _lm_params(cfg):
+    d, L = cfg.d_model, cfg.n_layers
+    hd = cfg.head_dim
+    p = {"embed": _sds((cfg.vocab_size, d))}
+    if cfg.attention != "none":
+        p["wq"] = _sds((L, d, cfg.n_heads * hd))
+        p["wk"] = _sds((L, d, cfg.n_kv_heads * hd))
+        p["wv"] = _sds((L, d, cfg.n_kv_heads * hd))
+        p["wo"] = _sds((L, cfg.n_heads * hd, d))
+    n_up = 2 if cfg.gated_mlp else 1
+    if cfg.n_experts > 1:
+        p["w_router"] = _sds((L, d, cfg.n_experts))
+        p["w_up"] = _sds((L, cfg.n_experts, d, cfg.d_ff * n_up))
+        p["w_down"] = _sds((L, cfg.n_experts, cfg.d_ff, d))
+    elif cfg.d_ff > 0:
+        p["w_up"] = _sds((L, d, cfg.d_ff * n_up))
+        p["w_down"] = _sds((L, cfg.d_ff, d))
+    if cfg.ssm_state > 0:
+        din = cfg.ssm_inner(d)
+        p["w_in"] = _sds((L, d, din * 2))
+        p["w_out"] = _sds((L, din, d))
+    p["norm_scale"] = _sds((d,))
+    p["lm_head"] = _sds((d, cfg.vocab_size))
+    return p
+
+
+def _rms_norm(x, scale):
+    import jax.numpy as jnp
+    m = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jnp.reciprocal(jnp.sqrt(m + 1e-6)) * scale
+
+
+def _attn_block(x, lp, cfg, *, kv=None):
+    """Full (unmasked) attention over ``kv`` context (defaults to self)."""
+    import jax
+    import jax.numpy as jnp
+
+    B, S, _ = x.shape
+    Hq, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,dk->bsk", x, lp["wq"]).reshape(B, S, Hq, hd)
+    if kv is None:
+        k = jnp.einsum("bsd,dk->bsk", x, lp["wk"]).reshape(B, S, Hkv, hd)
+        v = jnp.einsum("bsd,dk->bsk", x, lp["wv"]).reshape(B, S, Hkv, hd)
+        ret = (k, v)
+    else:
+        k, v = kv
+        ret = None
+    if Hkv != Hq:
+        k = jnp.repeat(k, Hq // Hkv, axis=2)
+        v = jnp.repeat(v, Hq // Hkv, axis=2)
+    scores = jnp.einsum("bshd,bthd->bhst", q, k) * (hd ** -0.5)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhst,bthd->bshd", probs, v)
+    o = jnp.einsum("bsk,kd->bsd", ctx.reshape(B, S, Hq * hd), lp["wo"])
+    return x + o, ret
+
+
+def _ffn_block(x, lp, cfg):
+    import jax
+    import jax.numpy as jnp
+
+    if cfg.n_experts > 1:
+        gate = jnp.einsum("bsd,de->bse", x, lp["w_router"])
+        top_p, top_e = jax.lax.top_k(jax.nn.softmax(gate, -1), cfg.top_k)
+        up_sel = lp["w_up"][top_e]          # (B,S,k,d,ff·n_up) — selection
+        dn_sel = lp["w_down"][top_e]        # stays a weight view (lowering)
+        h = jnp.einsum("bsd,bskdf->bskf", x, up_sel)
+        if cfg.gated_mlp:
+            a, b = jnp.split(h, 2, axis=-1)
+            h = jax.nn.silu(a) * b
+        else:
+            h = jax.nn.silu(h)
+        y = jnp.einsum("bskf,bskfd->bskd", h, dn_sel)
+        return x + (y * top_p[..., None]).sum(axis=2)
+    h = jnp.einsum("bsd,df->bsf", x, lp["w_up"])
+    if cfg.gated_mlp:
+        a, b = jnp.split(h, 2, axis=-1)
+        h = jax.nn.silu(a) * b
+    else:
+        h = jax.nn.silu(h)
+    return x + jnp.einsum("bsf,fd->bsd", h, lp["w_down"])
+
+
+def _ssm_block(x, lp, cfg):
+    """State mixing abstracted to elementwise work: the hand DAG prices
+    only the in/out projections as MVMs, and so must the reference."""
+    import jax
+    import jax.numpy as jnp
+
+    xp = jnp.einsum("bsd,dk->bsk", x, lp["w_in"])
+    z, g = jnp.split(xp, 2, axis=-1)
+    h = jax.nn.silu(z) * jnp.tanh(g)
+    return x + jnp.einsum("bsk,kd->bsd", h, lp["w_out"])
+
+
+def _layer(x, lp, cfg, *, kv=None):
+    ret = None
+    if cfg.attention != "none":
+        x, ret = _attn_block(x, lp, cfg, kv=kv)
+    if cfg.n_experts > 1 or cfg.d_ff > 0:
+        x = _ffn_block(x, lp, cfg)
+    if cfg.ssm_state > 0:
+        x = _ssm_block(x, lp, cfg)
+    return x, ret
+
+
+def _stacked(params, cfg):
+    """The per-layer (scanned) subset of the parameter dict."""
+    return {k: v for k, v in params.items()
+            if k not in ("embed", "norm_scale", "lm_head")}
+
+
+def reference_program(cfg, *, step: str, seq_len: int,
+                      batch: int) -> Tuple[object, dict, tuple]:
+    """(fn, abstract params, abstract args) for one LM step kind."""
+    import jax
+    import jax.numpy as jnp
+
+    params = _lm_params(cfg)
+    B, S = batch, seq_len
+    toks = _sds((B, S), "int32")
+
+    if step == "forward":
+        def fn(p, tokens):
+            x = jnp.take(p["embed"], tokens, axis=0)
+
+            def body(x, lp):
+                x, _ = _layer(x, lp, cfg)
+                return x, None
+
+            x, _ = jax.lax.scan(body, x, _stacked(p, cfg))
+            x = _rms_norm(x, p["norm_scale"])
+            return jnp.einsum("bsd,dv->bsv", x, p["lm_head"])
+        return fn, params, (toks,)
+
+    if step == "prefill":
+        def fn(p, tokens):
+            x = jnp.take(p["embed"], tokens, axis=0)
+
+            def body(x, lp):
+                x, kv = _layer(x, lp, cfg)
+                return x, kv
+
+            x, cache = jax.lax.scan(body, x, _stacked(p, cfg))
+            x = _rms_norm(x, p["norm_scale"])
+            return jnp.einsum("bsd,dv->bsv", x, p["lm_head"]), cache
+        return fn, params, (toks,)
+
+    if step == "decode":
+        tok1 = _sds((B, 1), "int32")
+        cache = {}
+        if cfg.attention != "none":
+            hd, Hkv, L = cfg.head_dim, cfg.n_kv_heads, cfg.n_layers
+            cache = {"k": _sds((L, B, S, Hkv, hd)),
+                     "v": _sds((L, B, S, Hkv, hd))}
+
+        def fn(p, tokens, cache):
+            x = jnp.take(p["embed"], tokens, axis=0)
+            xs = _stacked(p, cfg)
+            if cache:
+                xs = (xs, cache["k"], cache["v"])
+
+                def body(x, sc):
+                    lp, ck, cv = sc
+                    x, _ = _layer(x, lp, cfg, kv=(ck, cv))
+                    return x, None
+            else:
+                def body(x, lp):
+                    x, _ = _layer(x, lp, cfg)
+                    return x, None
+
+            x, _ = jax.lax.scan(body, x, xs)
+            x = _rms_norm(x, p["norm_scale"])
+            return jnp.einsum("bsd,dv->bsv", x, p["lm_head"])
+        return fn, params, (tok1, cache)
+
+    raise ValueError(f"unknown step {step!r}")
+
+
+# ---------------------------------------------------------------------------
+# CNN references: mirror the paper-model builders (vgg16 / resnet18/50).
+# ---------------------------------------------------------------------------
+
+def _conv2d(x, w, stride=1):
+    import jax
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"))
+
+
+def _relu(x):
+    import jax.numpy as jnp
+    return jnp.maximum(x, 0.0)
+
+
+def _maxpool2(x):
+    import jax
+    import jax.numpy as jnp
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                 (1, 1, 2, 2), (1, 1, 2, 2), "VALID")
+
+
+def _vgg16_program(img: int, num_classes: int):
+    layout = [64, 64, "M", 128, 128, "M", 256, 256, 256, "M",
+              512, 512, 512, "M", 512, 512, 512, "M"]
+
+    params, cin, hw, i = {}, 3, img, 0
+    for v in layout:
+        if v == "M":
+            hw //= 2
+        else:
+            params[f"conv{i}"] = _sds((v, cin, 3, 3))
+            cin, i = v, i + 1
+    flat = cin * hw * hw
+    if img >= 224:
+        params["fc1"] = _sds((flat, 4096))
+        params["fc2"] = _sds((4096, 4096))
+        params["fc3"] = _sds((4096, num_classes))
+    else:
+        params["fc1"] = _sds((flat, 512))
+        params["fc2"] = _sds((512, num_classes))
+
+    def fn(p, x):
+        i = 0
+        for v in layout:
+            if v == "M":
+                x = _maxpool2(x)
+            else:
+                x = _relu(_conv2d(x, p[f"conv{i}"]))
+                i += 1
+        x = x.reshape(1, -1)
+        x = x @ p["fc1"]
+        if "fc3" in p:
+            x = x @ p["fc2"]
+            x = x @ p["fc3"]
+        else:
+            x = x @ p["fc2"]
+        return x
+
+    return fn, params, (_sds((1, 3, img, img)),)
+
+
+def _resnet_program(blocks, bottleneck: bool, img: int, num_classes: int):
+    params = {}
+    stem_k = 7 if img >= 224 else 3
+    params["stem"] = _sds((64, 3, stem_k, stem_k))
+    cin = 64
+    for stage, (n_blocks, width) in enumerate(zip(blocks,
+                                                  (64, 128, 256, 512))):
+        for b in range(n_blocks):
+            stride = 2 if (b == 0 and stage > 0) else 1
+            tag = f"s{stage}b{b}"
+            if bottleneck:
+                params[f"{tag}_c1"] = _sds((width, cin, 1, 1))
+                params[f"{tag}_c2"] = _sds((width, width, 3, 3))
+                params[f"{tag}_c3"] = _sds((width * 4, width, 1, 1))
+                out_c = width * 4
+            else:
+                params[f"{tag}_c1"] = _sds((width, cin, 3, 3))
+                params[f"{tag}_c2"] = _sds((width, width, 3, 3))
+                out_c = width
+            if stride != 1 or cin != out_c:
+                params[f"{tag}_sc"] = _sds((out_c, cin, 1, 1))
+            cin = out_c
+    params["fc"] = _sds((cin, num_classes))
+
+    def fn(p, x):
+        import jax.numpy as jnp
+        x = _conv2d(x, p["stem"], 2 if img >= 224 else 1)
+        if img >= 224:
+            x = _maxpool2(x)
+        cin = 64
+        for stage, (n_blocks, width) in enumerate(zip(blocks,
+                                                      (64, 128, 256, 512))):
+            for b in range(n_blocks):
+                stride = 2 if (b == 0 and stage > 0) else 1
+                tag = f"s{stage}b{b}"
+                if bottleneck:
+                    h = _relu(_conv2d(x, p[f"{tag}_c1"]))
+                    h = _relu(_conv2d(h, p[f"{tag}_c2"], stride))
+                    h = _conv2d(h, p[f"{tag}_c3"])
+                    out_c = width * 4
+                else:
+                    h = _relu(_conv2d(x, p[f"{tag}_c1"], stride))
+                    h = _conv2d(h, p[f"{tag}_c2"])
+                    out_c = width
+                sc = (_conv2d(x, p[f"{tag}_sc"], stride)
+                      if f"{tag}_sc" in p else x)
+                x = _relu(h + sc)
+                cin = out_c
+        x = jnp.mean(x, axis=(2, 3))
+        return x @ p["fc"]
+
+    return fn, params, (_sds((1, 3, img, img)),)
+
+
+CNN_REFERENCES = ("vgg16", "resnet18", "resnet50")
+
+
+def cnn_program(model: str, *, img: int = 32, num_classes: int = 100):
+    if model == "vgg16":
+        return _vgg16_program(img, num_classes)
+    if model == "resnet18":
+        return _resnet_program((2, 2, 2, 2), False, img, num_classes)
+    if model == "resnet50":
+        return _resnet_program((3, 4, 6, 3), True, img, num_classes)
+    raise ValueError(f"no CNN reference for {model!r}; "
+                     f"choose from {CNN_REFERENCES}")
