@@ -1,0 +1,63 @@
+"""Analysis pre-flight overhead benchmark (jax-free, informational).
+
+``repro.analysis.validate`` now runs ahead of every explore sweep,
+trace lowering, and dryrun trace emission — so its cost *is* explore
+hot-path cost and needs to stay a tracked number.  Rows:
+
+* ``validate/<workload>`` — one full semantic validation (structure +
+  dims + sparsity + capacity) of a representative workload against the
+  usecase arch and default mapping; ``ops`` is the DAG size.  This is
+  the per-sweep overhead ``run_grid`` pays once per distinct input.
+* ``pass/<name>`` — one cold run of each *static* pass (source-level
+  AST checks) plus the full model-plane corpus sweep; this is what the
+  CI ``analysis`` job pays.
+
+The suite is new relative to older baselines, so ``compare.py`` reports
+it as informational until a refreshed ``BENCH_baseline.json`` lands.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+from repro.analysis import validate
+from repro.analysis.framework import PassContext, get_pass
+from repro.configs import get_config
+from repro.core import default_mapping, lm_workload, usecase_arch
+from repro.core.workload import MODEL_BUILDERS
+
+__all__ = ["run"]
+
+_VALIDATE_REPEATS = 50
+_WORKLOADS = ("resnet50", "vgg16", "lm:llama3-8b")
+_PASSES = ("import-boundary", "cache-key", "determinism", "model-plane")
+
+
+def _build(name: str):
+    if name.startswith("lm:"):
+        return lm_workload(get_config(name[3:]), seq_len=128)
+    return MODEL_BUILDERS[name]()
+
+
+def run() -> List[Dict]:
+    rows: List[Dict] = []
+    arch = usecase_arch(16)
+    mapping = default_mapping(arch, "spatial")
+
+    for wname in _WORKLOADS:
+        w = _build(wname)
+        t0 = time.perf_counter()
+        for _ in range(_VALIDATE_REPEATS):
+            diags = validate(w, arch, mapping)
+        dt = (time.perf_counter() - t0) / _VALIDATE_REPEATS
+        rows.append({"name": f"validate/{wname}",
+                     "us_per_call": dt * 1e6,
+                     "ops": len(w), "diags": len(diags)})
+
+    for pname in _PASSES:
+        t0 = time.perf_counter()
+        diags = get_pass(pname).run(PassContext())
+        dt = time.perf_counter() - t0
+        rows.append({"name": f"pass/{pname}",
+                     "us_per_call": dt * 1e6, "diags": len(diags)})
+    return rows

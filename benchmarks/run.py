@@ -37,8 +37,9 @@ import statistics
 import time
 from typing import Dict, List
 
-from . import (mapping_exploration, runtime_analysis, schedule_exploration,
-               sparsity_exploration, traced_lm, validation)
+from . import (analysis_preflight, mapping_exploration, runtime_analysis,
+               schedule_exploration, sparsity_exploration, traced_lm,
+               validation)
 
 SUITES = {
     "validation": validation.run,
@@ -47,6 +48,7 @@ SUITES = {
     "mapping": mapping_exploration.run,
     "schedule": schedule_exploration.run,
     "traced_lm": traced_lm.run,
+    "analysis": analysis_preflight.run,
 }
 
 # suites built on the repro.explore engine accept a worker count

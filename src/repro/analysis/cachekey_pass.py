@@ -1,0 +1,249 @@
+"""Pass 2 — cache-key completeness: no simulate-affecting knob may
+bypass the content-addressed cache.
+
+The explore plane memoises ``simulate()`` results under
+``ExploreJob.content_key`` (sha256 over ``explore.job.canonical``).
+Historically this contract broke silently three times — a new
+simulate-affecting field landed without a ``CACHE_SCHEMA`` bump and
+stale caches served wrong numbers.  This pass AST-diffs the three
+anchors so the contract is machine-checked:
+
+* ``core/costmodel.py::simulate`` — the semantic parameter surface,
+* ``explore/job.py::ExploreJob`` — the cached key's field set (hashed
+  generically: ``canonical`` must enumerate dataclass fields via
+  ``_sorted_field_names``/``dataclasses.fields``, never a hand list),
+* ``explore/runner.py::evaluate_job`` — the forwarding glue,
+* the numbered ``# N:`` history block above ``CACHE_SCHEMA``.
+
+Declared exceptions (each must stay justified here):
+
+* ``tile_cache`` is a *memo*, not a semantic input — simulate results
+  are bit-identical with or without it, so it must NOT enter the key.
+* ``kind`` is key metadata (dense-twin vs simulate) consumed by
+  ``evaluate_job``'s dispatch, not forwarded as a simulate kwarg.
+
+Codes
+-----
+* ``CIM200`` (error) — an anchor (file/function/class) moved and the
+  pass can no longer see it; fix the pass alongside the refactor.
+* ``CIM201`` (error) — ``simulate()`` keyword absent from
+  ``ExploreJob``: results would vary on a knob the cache key ignores.
+* ``CIM202`` (error) — ``ExploreJob`` field never read by
+  ``evaluate_job``: the key varies on a knob the evaluation ignores
+  (dead weight at best, a stale-key refactor remnant at worst).
+* ``CIM203`` (error) — ``canonical()`` no longer enumerates dataclass
+  fields generically, so new fields would silently skip the digest.
+* ``CIM204`` (error) — ``CACHE_SCHEMA`` has no matching ``# N:`` history
+  entry for its current value.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, List, Optional, Set, Tuple
+
+from .diagnostics import Diagnostic, Severity
+from .framework import AnalysisPass, PassContext, register
+
+__all__ = ["CacheKeyPass", "NON_SEMANTIC_SIMULATE_PARAMS",
+           "NON_FORWARDED_JOB_FIELDS"]
+
+# simulate() parameters that deliberately stay out of the cache key
+# (pure memoisation, bit-identical results either way).
+NON_SEMANTIC_SIMULATE_PARAMS = frozenset({"tile_cache"})
+
+# ExploreJob fields that deliberately aren't forwarded to simulate()
+# (consumed by evaluate_job's own dispatch instead).
+NON_FORWARDED_JOB_FIELDS = frozenset({"kind"})
+
+_HISTORY_RE = re.compile(r"^\s*#\s*(\d+)\s*:")
+
+
+def _find_def(tree: ast.Module, name: str) -> Optional[ast.FunctionDef]:
+    for node in ast.walk(tree):
+        if isinstance(node, ast.FunctionDef) and node.name == name:
+            return node
+    return None
+
+
+def _find_class(tree: ast.Module, name: str) -> Optional[ast.ClassDef]:
+    for node in tree.body:
+        if isinstance(node, ast.ClassDef) and node.name == name:
+            return node
+    return None
+
+
+def _dataclass_fields(cls: ast.ClassDef) -> Dict[str, int]:
+    """Annotated instance fields of a dataclass body: name -> lineno
+    (ClassVar annotations and underscored names excluded)."""
+    fields: Dict[str, int] = {}
+    for stmt in cls.body:
+        if not isinstance(stmt, ast.AnnAssign):
+            continue
+        if not isinstance(stmt.target, ast.Name):
+            continue
+        ann = ast.unparse(stmt.annotation)
+        if "ClassVar" in ann or stmt.target.id.startswith("_"):
+            continue
+        fields[stmt.target.id] = stmt.lineno
+    return fields
+
+
+def _signature_params(fn: ast.FunctionDef) -> Dict[str, int]:
+    """All named parameters (positional + kw-only): name -> lineno."""
+    params: Dict[str, int] = {}
+    for a in (*fn.args.posonlyargs, *fn.args.args, *fn.args.kwonlyargs):
+        params[a.arg] = a.lineno
+    return params
+
+
+def _attr_reads(fn: ast.FunctionDef, base: str) -> Set[str]:
+    """Attribute names read off ``<base>.`` anywhere in the body."""
+    out: Set[str] = set()
+    for node in ast.walk(fn):
+        if (isinstance(node, ast.Attribute)
+                and isinstance(node.value, ast.Name)
+                and node.value.id == base):
+            out.add(node.attr)
+    return out
+
+
+def _schema_assignment(tree: ast.Module) -> Optional[Tuple[int, int]]:
+    """(value, lineno) of the module-level ``CACHE_SCHEMA = <int>``."""
+    for node in tree.body:
+        if (isinstance(node, ast.Assign)
+                and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)
+                and node.targets[0].id == "CACHE_SCHEMA"
+                and isinstance(node.value, ast.Constant)
+                and isinstance(node.value.value, int)):
+            return node.value.value, node.lineno
+    return None
+
+
+def _history_entries(lines: List[str], assign_lineno: int) -> Set[int]:
+    """``# N:`` entries in the contiguous comment block directly above
+    the CACHE_SCHEMA assignment."""
+    entries: Set[int] = set()
+    i = assign_lineno - 2                     # line above, 0-based
+    while i >= 0 and lines[i].lstrip().startswith("#"):
+        m = _HISTORY_RE.match(lines[i])
+        if m:
+            entries.add(int(m.group(1)))
+        i -= 1
+    return entries
+
+
+@register
+class CacheKeyPass(AnalysisPass):
+    name = "cache-key"
+    codes = ("CIM200", "CIM201", "CIM202", "CIM203", "CIM204")
+    description = ("every simulate() knob must flow through ExploreJob, "
+                   "canonical() must hash fields generically, and "
+                   "CACHE_SCHEMA history must cover the current value")
+
+    def _missing(self, what: str, rel: str) -> Diagnostic:
+        return self.diag(
+            "CIM200", Severity.ERROR,
+            f"cache-key anchor not found: {what}",
+            file=rel,
+            hint="the cache-key pass tracks this symbol by name; update "
+                 "repro/analysis/cachekey_pass.py with the refactor")
+
+    def run(self, ctx: PassContext) -> List[Diagnostic]:
+        diags: List[Diagnostic] = []
+        pkg = ctx.package
+
+        cost_path = ctx.module_path(f"{pkg}.core.costmodel")
+        job_path = ctx.module_path(f"{pkg}.explore.job")
+        runner_path = ctx.module_path(f"{pkg}.explore.runner")
+        for what, p in (("core/costmodel.py", cost_path),
+                        ("explore/job.py", job_path),
+                        ("explore/runner.py", runner_path)):
+            if p is None:
+                diags.append(self._missing(what, what))
+        if any(p is None for p in (cost_path, job_path, runner_path)):
+            return diags
+
+        cost_rel, job_rel = ctx.rel(cost_path), ctx.rel(job_path)
+        runner_rel = ctx.rel(runner_path)
+
+        simulate = _find_def(ctx.tree(cost_path), "simulate")
+        job_cls = _find_class(ctx.tree(job_path), "ExploreJob")
+        canonical = _find_def(ctx.tree(job_path), "canonical")
+        evaluate = _find_def(ctx.tree(runner_path), "evaluate_job")
+        if simulate is None:
+            diags.append(self._missing("simulate()", cost_rel))
+        if job_cls is None:
+            diags.append(self._missing("class ExploreJob", job_rel))
+        if canonical is None:
+            diags.append(self._missing("canonical()", job_rel))
+        if evaluate is None:
+            diags.append(self._missing("evaluate_job()", runner_rel))
+        if None in (simulate, job_cls, canonical, evaluate):
+            return diags
+
+        params = _signature_params(simulate)
+        fields = _dataclass_fields(job_cls)
+
+        # CIM201 — simulate knob missing from the cache key
+        for name, lineno in sorted(params.items()):
+            if name in fields or name in NON_SEMANTIC_SIMULATE_PARAMS:
+                continue
+            diags.append(self.diag(
+                "CIM201", Severity.ERROR,
+                f"simulate() parameter {name!r} is not an ExploreJob "
+                f"field — cached results would ignore it",
+                file=cost_rel, line=lineno,
+                hint=f"add {name!r} to ExploreJob (it enters canonical() "
+                     f"automatically), bump CACHE_SCHEMA with a history "
+                     f"entry, and forward it in evaluate_job; if it is "
+                     f"pure memoisation, whitelist it in "
+                     f"NON_SEMANTIC_SIMULATE_PARAMS with a justification"))
+
+        # CIM202 — key field the evaluation never reads
+        reads = _attr_reads(evaluate, "job")
+        for name, lineno in sorted(fields.items()):
+            if name in reads or name in NON_FORWARDED_JOB_FIELDS:
+                continue
+            diags.append(self.diag(
+                "CIM202", Severity.ERROR,
+                f"ExploreJob field {name!r} is never read by "
+                f"evaluate_job — the cache key varies on a knob the "
+                f"evaluation ignores",
+                file=job_rel, line=lineno,
+                hint="forward it to simulate() in evaluate_job, or drop "
+                     "the field (bumping CACHE_SCHEMA either way)"))
+
+        # CIM203 — canonical() must enumerate dataclass fields generically
+        calls = {node.func.id if isinstance(node.func, ast.Name)
+                 else getattr(node.func, "attr", "")
+                 for node in ast.walk(canonical)
+                 if isinstance(node, ast.Call)}
+        if not calls & {"_sorted_field_names", "fields"}:
+            diags.append(self.diag(
+                "CIM203", Severity.ERROR,
+                "canonical() no longer enumerates dataclass fields "
+                "generically (_sorted_field_names / dataclasses.fields) "
+                "— new fields would silently skip the content key",
+                file=job_rel, line=canonical.lineno,
+                hint="hash dataclasses via their full sorted field set; "
+                     "hand-maintained field lists rot"))
+
+        # CIM204 — CACHE_SCHEMA history entry for the current value
+        schema = _schema_assignment(ctx.tree(job_path))
+        if schema is None:
+            diags.append(self._missing("CACHE_SCHEMA assignment", job_rel))
+        else:
+            value, lineno = schema
+            entries = _history_entries(ctx.source_lines(job_path), lineno)
+            if value not in entries:
+                known = ", ".join(str(e) for e in sorted(entries)) or "none"
+                diags.append(self.diag(
+                    "CIM204", Severity.ERROR,
+                    f"CACHE_SCHEMA = {value} has no matching '# {value}:' "
+                    f"history entry (recorded: {known})",
+                    file=job_rel, line=lineno,
+                    hint="every schema bump documents what changed in the "
+                         "comment block directly above the assignment"))
+        return diags

@@ -1,0 +1,216 @@
+"""Pass 1 — import-boundary: the modeling plane must not reach jax.
+
+Builds the module import graph purely from source (``ast`` — nothing is
+imported or executed) and enforces the repo's layering contract:
+
+* **Protected** (modeling plane, must import jax-free):
+  ``repro.core``, ``repro.explore``, ``repro.trace``, ``repro.configs``,
+  ``repro.calibrate``, ``repro.analysis``.
+* **Execution plane** (may import jax eagerly): everything else under
+  ``repro`` — ``models``, ``kernels``, ``serve``, ``launch``, ``train``,
+  ``runtime``, ``distributed``, ``sparsity``, ``data``.
+
+Only *eager* imports count: module-scope and class-scope statements, the
+bodies of module-scope ``if``/``try``/``with``.  Imports inside function
+bodies are the declared lazy-site mechanism (``pruning.py``-style) and
+are allowed — being inside a ``def`` is what *verifies* them lazy, since
+nothing runs at import time.  ``if TYPE_CHECKING:`` blocks never execute
+and are likewise exempt.
+
+Codes
+-----
+* ``CIM101`` (error) — eager import of a forbidden root (``jax``,
+  ``jaxlib``) from a protected module.
+* ``CIM102`` (error) — eager import of a repro module that itself
+  (transitively, via eager edges) reaches jax.
+* ``CIM103`` (error) — eager import crossing the boundary: a protected
+  module imports an execution-plane repro module at module scope.  Even
+  if that module is jax-free today, the edge breaks the layering
+  contract the jax-free CI jobs rely on.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Dict, List, Set, Tuple
+
+from .diagnostics import Diagnostic, Severity
+from .framework import AnalysisPass, PassContext, register
+
+__all__ = ["ImportBoundaryPass", "PROTECTED_PREFIXES", "FORBIDDEN_ROOTS",
+           "eager_imports", "build_eager_graph"]
+
+# Prefixes of the jax-free modeling plane.  A module is protected when
+# its dotted name equals a prefix or starts with "<prefix>.".
+PROTECTED_PREFIXES: Tuple[str, ...] = (
+    "repro.core", "repro.explore", "repro.trace",
+    "repro.configs", "repro.calibrate", "repro.analysis",
+)
+
+# Import roots the modeling plane must never reach eagerly.
+FORBIDDEN_ROOTS: Tuple[str, ...] = ("jax", "jaxlib")
+
+
+def is_protected(module: str) -> bool:
+    return any(module == p or module.startswith(p + ".")
+               for p in PROTECTED_PREFIXES)
+
+
+@dataclasses.dataclass
+class ImportSite:
+    target: str        # dotted module the statement names
+    lineno: int
+    lazy: bool         # inside a function body (or TYPE_CHECKING guard)
+
+
+def _is_type_checking_guard(node: ast.If) -> bool:
+    t = node.test
+    return ((isinstance(t, ast.Name) and t.id == "TYPE_CHECKING")
+            or (isinstance(t, ast.Attribute) and t.attr == "TYPE_CHECKING"))
+
+
+def _resolve_from(module: str, node: ast.ImportFrom) -> List[str]:
+    """Absolute candidate targets of a ``from X import a, b`` statement.
+
+    For relative imports the base is computed from the importing
+    module's package.  Each imported name is also emitted as a candidate
+    submodule (``from ..core import workload`` reaches
+    ``repro.core.workload`` when ``workload`` is a module)."""
+    if node.level == 0:
+        base = node.module or ""
+    else:
+        # strip the module's own leaf, then one package per extra dot
+        parts = module.split(".")
+        parts = parts[:len(parts) - node.level]
+        if node.module:
+            parts.append(node.module)
+        base = ".".join(parts)
+    if not base:
+        return []
+    out = [base]
+    out.extend(f"{base}.{alias.name}" for alias in node.names
+               if alias.name != "*")
+    return out
+
+
+def eager_imports(module: str, tree: ast.Module) -> List[ImportSite]:
+    """Every import statement in ``tree`` with its laziness resolved."""
+    sites: List[ImportSite] = []
+
+    def visit(node: ast.AST, lazy: bool) -> None:
+        for child in ast.iter_child_nodes(node):
+            child_lazy = lazy
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.Lambda)):
+                child_lazy = True
+            elif isinstance(child, ast.If) and _is_type_checking_guard(child):
+                child_lazy = True
+            if isinstance(child, ast.Import):
+                for alias in child.names:
+                    sites.append(ImportSite(alias.name, child.lineno, lazy))
+            elif isinstance(child, ast.ImportFrom):
+                for target in _resolve_from(module, child):
+                    sites.append(ImportSite(target, child.lineno, lazy))
+            else:
+                visit(child, child_lazy)
+
+    visit(tree, lazy=False)
+    return sites
+
+
+def build_eager_graph(ctx: PassContext) -> Dict[str, List[ImportSite]]:
+    """module -> eager import sites, for every module under src/repro."""
+    graph: Dict[str, List[ImportSite]] = {}
+    for module, path in ctx.iter_modules():
+        sites = eager_imports(module, ctx.tree(path))
+        graph[module] = [s for s in sites if not s.lazy]
+    return graph
+
+
+def _internal_target(target: str, modules: Set[str]) -> str:
+    """Map an import target onto a known repro module (longest match),
+    or '' when it is external."""
+    parts = target.split(".")
+    for i in range(len(parts), 0, -1):
+        cand = ".".join(parts[:i])
+        if cand in modules:
+            return cand
+    return ""
+
+
+def _jax_tainted(graph: Dict[str, List[ImportSite]],
+                 modules: Set[str]) -> Set[str]:
+    """Modules whose *import* (not call) transitively executes a jax
+    import — fixpoint over eager edges."""
+    tainted = {m for m, sites in graph.items()
+               if any(s.target.split(".")[0] in FORBIDDEN_ROOTS
+                      for s in sites)}
+    changed = True
+    while changed:
+        changed = False
+        for m, sites in graph.items():
+            if m in tainted:
+                continue
+            for s in sites:
+                dep = _internal_target(s.target, modules)
+                if dep and dep != m and dep in tainted:
+                    tainted.add(m)
+                    changed = True
+                    break
+    return tainted
+
+
+@register
+class ImportBoundaryPass(AnalysisPass):
+    name = "import-boundary"
+    codes = ("CIM101", "CIM102", "CIM103")
+    description = ("modeling-plane modules (core/explore/trace/configs/"
+                   "calibrate/analysis) must not reach jax or the "
+                   "execution plane through eager imports")
+
+    def run(self, ctx: PassContext) -> List[Diagnostic]:
+        graph = build_eager_graph(ctx)
+        modules = set(graph)
+        tainted = _jax_tainted(graph, modules)
+        diags: List[Diagnostic] = []
+        for module in sorted(graph):
+            if not is_protected(module):
+                continue
+            path = ctx.module_path(module)
+            rel = ctx.rel(path) if path else module
+            seen: Set[Tuple[str, int, str]] = set()
+            for site in graph[module]:
+                root = site.target.split(".")[0]
+                dep = _internal_target(site.target, modules)
+                finding = None
+                if root in FORBIDDEN_ROOTS:
+                    finding = ("CIM101",
+                               f"protected module {module} eagerly imports "
+                               f"{site.target}",
+                               "move the import inside the function that "
+                               "needs it (lazy site), or relocate this code "
+                               "to the execution plane")
+                elif dep and dep != module and dep in tainted:
+                    finding = ("CIM102",
+                               f"protected module {module} eagerly imports "
+                               f"{dep}, which transitively imports jax",
+                               f"break the eager chain: make the jax import "
+                               f"in {dep} (or below) lazy")
+                elif dep and dep != module and not is_protected(dep):
+                    finding = ("CIM103",
+                               f"protected module {module} eagerly imports "
+                               f"execution-plane module {dep}",
+                               "import it lazily inside the consuming "
+                               "function, or move the shared code into the "
+                               "modeling plane")
+                if finding is None:
+                    continue
+                code, msg, hint = finding
+                key = (code, site.lineno, dep or site.target)
+                if key in seen:       # one report per statement/edge
+                    continue
+                seen.add(key)
+                diags.append(self.diag(code, Severity.ERROR, msg,
+                                       file=rel, line=site.lineno,
+                                       hint=hint))
+        return diags

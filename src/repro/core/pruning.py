@@ -70,7 +70,7 @@ def fullblock_mask(
     pattern: FullBlock,
     criterion: str = "l1",
     *,
-    eligible: Optional[jnp.ndarray] = None,
+    eligible: Optional[np.ndarray] = None,
 ) -> np.ndarray:
     """Binary keep-mask (1 = keep) for FullBlock sparsity.
 
@@ -158,8 +158,13 @@ class PruningResult:
     def apply(self, w):
         if isinstance(w, np.ndarray):
             return w * self.mask.astype(w.dtype)
-        import jax.numpy as jnp   # device arrays: mask moves to the weight
-
+        try:
+            # device arrays: mask moves to the weight (lazy site — the
+            # modeling plane must stay importable without jax)
+            import jax.numpy as jnp
+        except ImportError:
+            arr = np.asarray(w)
+            return arr * self.mask.astype(arr.dtype)
         return w * jnp.asarray(self.mask, dtype=w.dtype)
 
 

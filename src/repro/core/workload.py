@@ -16,13 +16,13 @@ from __future__ import annotations
 import dataclasses
 import math
 from collections import deque
-from typing import Dict, Iterable, List, Optional, Tuple
+from typing import Dict, Iterable, List, NamedTuple, Optional, Tuple
 
 from .flexblock import FlexBlockSpec, dense_spec
 
-__all__ = ["OpNode", "Workload", "vgg16", "resnet18", "resnet50",
-           "mobilenet_v2", "lm_workload", "MODEL_BUILDERS", "MVM_KINDS",
-           "OTHER_KINDS", "warn_unknown_kind"]
+__all__ = ["OpNode", "Workload", "WorkloadIssue", "vgg16", "resnet18",
+           "resnet50", "mobilenet_v2", "lm_workload", "MODEL_BUILDERS",
+           "MVM_KINDS", "OTHER_KINDS", "warn_unknown_kind"]
 
 MVM_KINDS = ("conv", "fc", "matmul")
 
@@ -92,6 +92,20 @@ class OpNode:
         if self.weight_count is not None:
             return self.weight_count
         return self.K * self.N if self.is_mvm else 0
+
+
+class WorkloadIssue(NamedTuple):
+    """One structural problem found by :meth:`Workload.validate`.
+
+    ``kind`` is one of ``dangling-edge`` / ``name-mismatch`` / ``cycle``
+    / ``isolated``; ``path`` is an object path relative to the workload
+    (e.g. ``nodes['s0b0_add'].inputs[1]``).  Kept dependency-free so the
+    core stays importable without :mod:`repro.analysis`.
+    """
+
+    kind: str
+    path: str
+    message: str
 
 
 class Workload:
@@ -194,6 +208,63 @@ class Workload:
         for name in self.nodes:              # insertion order within levels
             out[depth[name]].append(name)
         return out
+
+    def validate(self) -> List["WorkloadIssue"]:
+        """Exhaustive structural audit of the DAG.
+
+        Unlike :meth:`topo_order`, which raises on the first cycle, this
+        reports *every* problem at once — dangling edge targets, dict-key /
+        node-name mismatches (the splice hazard duplicate detection in
+        :meth:`add` cannot see), cycle members, and isolated ops — as
+        :class:`WorkloadIssue` records.  ``repro.analysis`` converts these
+        into coded diagnostics (CIM301–CIM304); library callers can treat a
+        non-empty ``[i for i in w.validate() if i.kind != "isolated"]`` as
+        fatal.
+        """
+        issues: List[WorkloadIssue] = []
+        for key, node in self.nodes.items():
+            if key != node.name:
+                issues.append(WorkloadIssue(
+                    "name-mismatch", f"nodes[{key!r}]",
+                    f"dict key {key!r} != node.name {node.name!r}"))
+            for i, inp in enumerate(node.inputs):
+                if inp not in self.nodes:
+                    issues.append(WorkloadIssue(
+                        "dangling-edge", f"nodes[{key!r}].inputs[{i}]",
+                        f"{key!r} consumes unknown op {inp!r}"))
+        # Kahn over the *resolvable* edges so cycles are reported even
+        # when dangling edges coexist; stuck nodes are the cycle members.
+        indeg = {k: sum(1 for i in n.inputs if i in self.nodes)
+                 for k, n in self.nodes.items()}
+        consumers: Dict[str, List[str]] = {k: [] for k in self.nodes}
+        for k, n in self.nodes.items():
+            for inp in n.inputs:
+                if inp in self.nodes:
+                    consumers[inp].append(k)
+        ready = deque(k for k, d in indeg.items() if d == 0)
+        visited = 0
+        while ready:
+            k = ready.popleft()
+            visited += 1
+            for c in consumers[k]:
+                indeg[c] -= 1
+                if indeg[c] == 0:
+                    ready.append(c)
+        if visited != len(self.nodes):
+            stuck = [k for k, d in indeg.items() if d > 0]
+            for k in stuck:
+                issues.append(WorkloadIssue(
+                    "cycle", f"nodes[{k!r}]",
+                    f"{k!r} is part of a dependency cycle "
+                    f"(members: {sorted(stuck)})"))
+        if len(self.nodes) > 1:
+            for k, n in self.nodes.items():
+                if not n.inputs and not consumers[k]:
+                    issues.append(WorkloadIssue(
+                        "isolated", f"nodes[{k!r}]",
+                        f"{k!r} has no inputs and no consumers — "
+                        f"disconnected from the DAG"))
+        return issues
 
     # -- queries --------------------------------------------------------------
     def mvm_ops(self, scope: str = "all") -> List[OpNode]:

@@ -40,6 +40,7 @@ import argparse
 import sys
 from typing import Dict, List, Optional
 
+from ..analysis import AnalysisError, preflight
 from ..core import (TABLE_II_PATTERNS, MODEL_BUILDERS, hybrid, lm_workload,
                     usecase_arch)
 from ..core.presets import PRESET_ARCHS
@@ -326,6 +327,25 @@ def main(argv: Optional[List[str]] = None) -> int:
             stats = stats.merge(r.stats)
         return SweepResult(rows=[row for r in results for row in r.rows],
                            stats=stats)
+
+    # strict pre-flight (CIMFlow-style front-end rejection): validate a
+    # fresh instance of the swept workload — plus the preset arch, when
+    # one is named — before any grid is built or simulated.  Costs one
+    # extra workload build; saves hours on a million-point sweep fed an
+    # ill-formed traced DAG.
+    if args.sweep == "lm":
+        from ..configs import get_config
+        _wl = (wl_override
+               or (lambda: lm_workload(get_config(args.config),
+                                       seq_len=args.seq_len)))()
+    else:
+        _wl = (wl_override
+               or (lambda: MODEL_BUILDERS[args.model](args.img)))()
+    _arch = PRESET_ARCHS[args.arch]() if args.arch else None
+    try:
+        preflight(_wl, _arch, strict=True, where="repro.explore")
+    except AnalysisError as e:
+        ap.error(str(e))
 
     result = run_policies(profile)
     if args.diff_analytic:

@@ -19,6 +19,7 @@ import json
 from pathlib import Path
 from typing import (Callable, Dict, List, Optional, Sequence, Tuple, Union)
 
+from ..analysis import preflight
 from ..calibrate.profile import CalibrationProfile
 from ..core.costmodel import compare
 from ..core.flexblock import FlexBlockSpec
@@ -114,6 +115,16 @@ def run_grid(points: Sequence[GridPoint], *,
     runner = runner or SweepRunner(workers=workers, cache=cache,
                                    tile_cache_capacity=tile_cache_capacity)
     jobs: List[ExploreJob] = []
+    # warn-only pre-flight (strict rejection lives in the CLIs): each
+    # distinct workload/arch/mapping triple is validated once, O(ops),
+    # before any simulation burns time on ill-formed inputs
+    checked: set = set()
+    for p in points:
+        key = (id(p.job.workload), id(p.job.arch), id(p.job.mapping))
+        if key not in checked:
+            checked.add(key)
+            preflight(p.job.workload, p.job.arch, p.job.mapping,
+                      strict=False, where="explore.run_grid")
     for p in points:
         jobs.append(p.job)
         jobs.append(p.dense)

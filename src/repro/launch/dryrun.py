@@ -426,6 +426,10 @@ def _emit_trace(arch: str, cell: ShapeCell, out: str) -> Dict[str, Any]:
     path = os.path.join(tdir, f"{arch}_{cell.name}.json")
     graph.save(path)
     wl = lower_graph(graph)
+    # strict pre-flight: a broken lowered DAG fails this cell's record
+    # (the per-cell try/except upstream turns it into a failure row)
+    from ..analysis import preflight
+    preflight(wl, strict=True, where="dryrun.emit_trace")
     s = summarize(wl)
     return {"trace_path": path, "trace_digest": graph.digest(),
             "trace_ops": len(wl), "trace_mvm_macs": s["mvm_macs"],

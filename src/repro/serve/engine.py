@@ -39,6 +39,13 @@ class ServeEngine:
                  dtype=jnp.float32):
         self.cfg, self.params = cfg, params
         self.slots, self.max_len = slots, max_len
+        # warn-only pre-flight: surface a structurally broken config
+        # (bad dims, incoherent DAG) at engine construction instead of
+        # as a shape error mid-request
+        from ..analysis import preflight
+        from ..core.workload import lm_workload
+        preflight(lm_workload(cfg, seq_len=max_len, batch=slots),
+                  strict=False, where="serve.engine")
         self.greedy = greedy
         self.cache = init_cache(cfg, slots, max_len, dtype=dtype)
         self.slot_req: List[Optional[Request]] = [None] * slots

@@ -188,6 +188,12 @@ def main(argv: Optional[List[str]] = None) -> int:
         return 0
 
     wl = _load_workload(ap, args)
+    # strict pre-flight: CLI entry points reject broken DAGs outright
+    from ..analysis import AnalysisError, preflight
+    try:
+        preflight(wl, strict=True, where="repro.trace")
+    except AnalysisError as e:
+        ap.error(str(e))
     if args.cmd == "lower":
         _print_workload(wl)
         if args.simulate:

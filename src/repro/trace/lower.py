@@ -439,4 +439,9 @@ def lower_graph(graph: TraceGraph, *, name: Optional[str] = None,
     if fold:
         _fold_simple_chains(w)
     w.source_digest = graph.digest()
+    # warn-only pre-flight: a lowering bug that produces a structurally
+    # broken DAG should surface here, not deep inside a sweep (CLIs —
+    # repro.trace, repro.explore — re-check strictly and reject)
+    from ..analysis import preflight
+    preflight(w, strict=False, where="trace.lower")
     return w

@@ -1,0 +1,419 @@
+"""Tests for repro.analysis — the static invariant-verification layer.
+
+Two families:
+
+* **Seeded-mutation golden diagnostics** — copy ``src/`` into a tmp
+  tree, inject one defect of a pass's target class, and assert the pass
+  reports *exactly* the expected error code (and stays silent on the
+  adjacent clean constructs).  This is the proof each pass catches its
+  defect class, per ISSUE 7's acceptance criteria.
+* **Repo self-cleanliness** — every pass runs clean on the real tree
+  (the property the blocking ``analysis`` CI job gates), and the
+  model-plane corpus (presets × builders, all configs, golden trace
+  fixtures) validates with zero diagnostics.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import shutil
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import (AnalysisError, Severity, preflight, run_passes,
+                            validate)
+from repro.analysis.framework import PassContext, get_pass
+from repro.analysis.__main__ import main as analysis_main
+from repro.configs import all_configs
+from repro.core.flexblock import row_block
+from repro.core.mapping import MappingSpec, ReshapeSpec
+from repro.core.presets import PRESET_ARCHS
+from repro.core.workload import (MODEL_BUILDERS, OpNode, Workload,
+                                 lm_workload)
+
+REPO = Path(__file__).resolve().parents[1]
+FIXTURES = sorted((REPO / "tests" / "fixtures" / "trace").glob("*.json"))
+
+
+def _codes(diags, *, errors_only: bool = True):
+    return sorted({d.code for d in diags
+                   if not d.suppressed
+                   and (not errors_only or d.severity == Severity.ERROR)})
+
+
+def _mutated_tree(tmp_path: Path) -> Path:
+    """A throwaway copy of src/ to inject defects into."""
+    root = tmp_path / "tree"
+    shutil.copytree(REPO / "src", root / "src")
+    return root
+
+
+def _run(pass_name: str, root: Path):
+    return get_pass(pass_name).run(PassContext(root=root))
+
+
+def _append(root: Path, rel: str, text: str) -> None:
+    p = root / "src" / "repro" / rel
+    p.write_text(p.read_text() + text)
+
+
+def _sub(root: Path, rel: str, old: str, new: str) -> None:
+    p = root / "src" / "repro" / rel
+    text = p.read_text()
+    assert old in text, f"mutation anchor {old!r} missing from {rel}"
+    p.write_text(text.replace(old, new))
+
+
+# ---------------------------------------------------------------------------
+# repo self-cleanliness (what the CI `analysis` job gates)
+# ---------------------------------------------------------------------------
+
+def test_repo_is_clean_under_all_passes():
+    diags = [d for d in run_passes(None, root=REPO) if not d.suppressed]
+    assert not [d for d in diags if d.severity == Severity.ERROR], \
+        [f"{d.code} {d.location}: {d.message}" for d in diags]
+    assert not [d for d in diags if d.severity == Severity.WARNING], \
+        [f"{d.code} {d.location}: {d.message}" for d in diags]
+
+
+def test_cli_all_json_exits_zero(capsys):
+    rc = analysis_main(["--all", "--format", "json"])
+    payload = json.loads(capsys.readouterr().out)
+    assert rc == 0
+    assert payload["ok"] is True
+    assert payload["counts"]["error"] == 0
+    assert set(payload["passes"]) == {"import-boundary", "cache-key",
+                                      "model-plane", "determinism"}
+
+
+def test_cli_runs_without_jax(tmp_path):
+    """The entire checker must work on a jax-free interpreter."""
+    nojax = tmp_path / "nojax"
+    nojax.mkdir()
+    (nojax / "jax.py").write_text("raise ImportError('no jax here')\n")
+    env_path = f"{nojax}:{REPO / 'src'}"
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--all"],
+        env={"PATH": "/usr/bin:/bin", "PYTHONPATH": env_path},
+        capture_output=True, text=True, cwd=str(REPO))
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_cli_rejects_unknown_pass():
+    with pytest.raises(SystemExit) as ei:
+        analysis_main(["--pass", "nonsense"])
+    assert ei.value.code == 2
+
+
+def test_cli_list(capsys):
+    assert analysis_main(["--list"]) == 0
+    out = capsys.readouterr().out
+    for name in ("import-boundary", "cache-key", "model-plane",
+                 "determinism"):
+        assert name in out
+
+
+# ---------------------------------------------------------------------------
+# pass 1: import-boundary (seeded mutations)
+# ---------------------------------------------------------------------------
+
+def test_boundary_clean_tree_has_no_findings(tmp_path):
+    assert _run("import-boundary", _mutated_tree(tmp_path)) == []
+
+
+def test_boundary_catches_toplevel_jax_import(tmp_path):
+    root = _mutated_tree(tmp_path)
+    _append(root, "core/flexblock.py", "\nimport jax\n")
+    diags = _run("import-boundary", root)
+    assert _codes(diags) == ["CIM101", "CIM102"]
+    cim101 = [d for d in diags if d.code == "CIM101"]
+    assert len(cim101) == 1
+    assert cim101[0].file.endswith("core/flexblock.py")
+    # the taint propagates to eager importers of flexblock
+    assert any(d.code == "CIM102" for d in diags)
+
+
+def test_boundary_catches_transitive_jax_reach(tmp_path):
+    root = _mutated_tree(tmp_path)
+    # serve.engine imports jax eagerly (execution plane, legal there);
+    # pulling it into the explore plane must flag the importing edge
+    _append(root, "explore/job.py", "\nfrom ..serve import engine\n")
+    diags = _run("import-boundary", root)
+    assert "CIM102" in _codes(diags)
+    assert any(d.file.endswith("explore/job.py") for d in diags)
+
+
+def test_boundary_catches_plane_crossing_without_jax(tmp_path):
+    root = _mutated_tree(tmp_path)
+    # a brand-new, import-free execution-plane module: crossing into it
+    # is still a layering violation (CIM103), even with no jax anywhere
+    (root / "src" / "repro" / "launch" / "_stub.py").write_text("X = 1\n")
+    _append(root, "core/workload.py", "\nfrom ..launch import _stub\n")
+    diags = _run("import-boundary", root)
+    assert _codes(diags) == ["CIM103"]
+
+
+def test_boundary_allows_lazy_and_type_checking_imports(tmp_path):
+    root = _mutated_tree(tmp_path)
+    _append(root, "core/flexblock.py", (
+        "\nfrom typing import TYPE_CHECKING\n"
+        "if TYPE_CHECKING:\n    import jax\n"
+        "def _lazy_site():\n    import jax.numpy as jnp\n"
+        "    return jnp\n"))
+    assert _run("import-boundary", root) == []
+
+
+def test_boundary_suppression_marker(tmp_path):
+    root = _mutated_tree(tmp_path)
+    _append(root, "core/flexblock.py",
+            "\nimport jax  # ciminus: ignore[*] -- test waiver\n")
+    diags = run_passes(["import-boundary"], root=root)
+    assert all(d.suppressed for d in diags if d.code == "CIM101")
+
+
+# ---------------------------------------------------------------------------
+# pass 2: cache-key completeness (seeded mutations)
+# ---------------------------------------------------------------------------
+
+def test_cachekey_clean_tree_has_no_findings(tmp_path):
+    assert _run("cache-key", _mutated_tree(tmp_path)) == []
+
+
+def test_cachekey_catches_new_simulate_kwarg(tmp_path):
+    root = _mutated_tree(tmp_path)
+    _sub(root, "core/costmodel.py",
+         "def simulate(",
+         "def simulate(*, _rounding_mode: str = 'even'):\n    pass\n"
+         "def _old_simulate(")
+    diags = _run("cache-key", root)
+    assert "CIM201" in _codes(diags)
+    assert any("_rounding_mode" in d.message for d in diags)
+
+
+def test_cachekey_catches_unforwarded_job_field(tmp_path):
+    root = _mutated_tree(tmp_path)
+    _sub(root, "explore/runner.py", "profile=job.profile,", "profile=None,")
+    diags = _run("cache-key", root)
+    assert _codes(diags) == ["CIM202"]
+    assert any("'profile'" in d.message for d in diags)
+
+
+def test_cachekey_catches_hand_listed_canonical(tmp_path):
+    root = _mutated_tree(tmp_path)
+    _sub(root, "explore/job.py",
+         "_sorted_field_names(type(obj))", "('arch', 'workload')")
+    diags = _run("cache-key", root)
+    assert "CIM203" in _codes(diags)
+
+
+def test_cachekey_catches_schema_bump_without_history(tmp_path):
+    root = _mutated_tree(tmp_path)
+    _sub(root, "explore/job.py", "CACHE_SCHEMA = 5", "CACHE_SCHEMA = 6")
+    diags = _run("cache-key", root)
+    assert _codes(diags) == ["CIM204"]
+
+
+def test_cachekey_anchors_present_or_cim200(tmp_path):
+    root = _mutated_tree(tmp_path)
+    _sub(root, "explore/runner.py", "def evaluate_job(", "def eval_job_v2(")
+    diags = _run("cache-key", root)
+    assert "CIM200" in _codes(diags)
+
+
+# ---------------------------------------------------------------------------
+# pass 3: model-plane validation (live-object goldens)
+# ---------------------------------------------------------------------------
+
+def _splice(w: Workload, key: str, node: OpNode) -> None:
+    w.nodes[key] = node     # bypass add(): the hazard validate() targets
+
+
+def test_modelplane_dangling_edge():
+    w = Workload("t")
+    w.fc("a", 16, 16)
+    _splice(w, "b", OpNode(name="b", kind="add", inputs=("ghost",),
+                           elements=4))
+    codes = _codes(validate(w))
+    assert codes == ["CIM301"]
+
+
+def test_modelplane_name_mismatch_and_cycle():
+    w = Workload("t")
+    w.fc("a", 16, 16)
+    _splice(w, "b", OpNode(name="zzz", kind="fc", K=4, N=4, V=1))
+    _splice(w, "c", OpNode(name="c", kind="fc", inputs=("d",),
+                           K=4, N=4, V=1))
+    _splice(w, "d", OpNode(name="d", kind="fc", inputs=("c",),
+                           K=4, N=4, V=1))
+    codes = _codes(validate(w))
+    assert codes == ["CIM302", "CIM303"]
+
+
+def test_modelplane_isolated_op_is_warning_only():
+    w = Workload("t")
+    w.fc("a", 16, 16)
+    w.fc("b", 16, 16, inputs=("a",))
+    w.fc("loner", 8, 8)
+    diags = validate(w)
+    assert _codes(diags) == []                       # no errors
+    assert _codes(diags, errors_only=False) == ["CIM304"]
+
+
+def test_modelplane_bad_dims():
+    w = Workload("t")
+    _splice(w, "a", OpNode(name="a", kind="conv", K=0, N=-3, V=1))
+    assert _codes(validate(w)) == ["CIM305"]
+
+
+def test_modelplane_incompatible_sparsity():
+    w = Workload("t")
+    w.fc("a", 16, 16)
+    w.nodes["a"].sparsity = row_block(0.5, width=10 ** 6)  # block >> matrix
+    assert _codes(validate(w)) == ["CIM306"]
+
+
+def test_modelplane_index_capacity_infeasible():
+    arch = PRESET_ARCHS["mars"]()
+    tiny = dataclasses.replace(arch.mem("index_mem"), capacity_bytes=1)
+    arch = arch.replace(
+        memory_units={**arch.memory_units, "index_mem": tiny})
+    w = Workload("t")
+    w.fc("a", 4096, 4096)
+    w.nodes["a"].sparsity = row_block(0.5, width=16)
+    assert "CIM307" in _codes(validate(w, arch))
+
+
+def test_modelplane_arch_contract():
+    arch = PRESET_ARCHS["mars"]()
+    broken = arch.replace(compute_units={
+        k: v for k, v in arch.compute_units.items() if k != "adder_tree"})
+    w = Workload("t")
+    w.fc("a", 16, 16)
+    assert "CIM309" in _codes(validate(w, broken))
+
+
+def test_modelplane_mapping_contract():
+    w = Workload("t")
+    w.fc("a", 16, 16)
+    mapping = MappingSpec(
+        reshape=ReshapeSpec(rearrange="slice", slice_size=0),
+        strategy="bogus")
+    codes = _codes(validate(w, None, mapping))
+    assert codes == ["CIM310"]
+    assert len([d for d in validate(w, None, mapping)
+                if d.code == "CIM310"]) == 2          # strategy + slice
+
+
+def test_workload_validate_reports_everything_at_once():
+    w = Workload("t")
+    w.fc("a", 16, 16)
+    _splice(w, "b", OpNode(name="b", kind="add", inputs=("ghost",),
+                           elements=4))
+    _splice(w, "c", OpNode(name="wrong", kind="fc", K=4, N=4, V=1))
+    _splice(w, "d", OpNode(name="d", kind="fc", inputs=("e",),
+                           K=4, N=4, V=1))
+    _splice(w, "e", OpNode(name="e", kind="fc", inputs=("d",),
+                           K=4, N=4, V=1))
+    kinds = {i.kind for i in w.validate()}
+    assert {"dangling-edge", "name-mismatch", "cycle",
+            "isolated"} <= kinds
+    # topo_order still raises (legacy contract unchanged)
+    with pytest.raises(ValueError):
+        w.topo_order()
+
+
+# ---------------------------------------------------------------------------
+# preflight policy (strict vs warn-only)
+# ---------------------------------------------------------------------------
+
+def _broken_workload() -> Workload:
+    w = Workload("broken")
+    _splice(w, "a", OpNode(name="a", kind="add", inputs=("ghost",),
+                           elements=4))
+    return w
+
+
+def test_preflight_strict_raises():
+    with pytest.raises(AnalysisError) as ei:
+        preflight(_broken_workload(), strict=True, where="unit-test")
+    assert "CIM301" in str(ei.value)
+
+
+def test_preflight_warn_only_warns():
+    with pytest.warns(RuntimeWarning, match="CIM301"):
+        preflight(_broken_workload(), strict=False,
+                  where="unit-test-warn")
+
+
+def test_preflight_env_kill_switch(monkeypatch):
+    monkeypatch.setenv("REPRO_ANALYSIS_PREFLIGHT", "0")
+    assert preflight(_broken_workload(), strict=True) == []
+
+
+# ---------------------------------------------------------------------------
+# pass 4: determinism lint (seeded mutations)
+# ---------------------------------------------------------------------------
+
+def test_determinism_clean_tree_has_no_findings(tmp_path):
+    assert _run("determinism", _mutated_tree(tmp_path)) == []
+
+
+@pytest.mark.parametrize("snippet,code", [
+    ("x = np.random.rand(3)", "CIM401"),
+    ("g = np.random.default_rng()", "CIM401"),
+    ("import random\nr = random.random()", "CIM401"),
+    ("import time\nt = time.time()", "CIM402"),
+    ("h = hash((1, 2))", "CIM403"),
+    ("import os\nfiles = os.listdir('.')", "CIM404"),
+])
+def test_determinism_catches(tmp_path, snippet, code):
+    root = _mutated_tree(tmp_path)
+    body = "\n".join("    " + line for line in snippet.splitlines())
+    _append(root, "core/flexblock.py", f"\ndef _mutant():\n{body}\n")
+    assert _codes(_run("determinism", root)) == [code]
+
+
+@pytest.mark.parametrize("snippet", [
+    "g = np.random.default_rng(42)",                  # seeded
+    "import time\nt = time.perf_counter()",           # monotonic
+    "import os\nfiles = sorted(os.listdir('.'))",     # sorted enumeration
+])
+def test_determinism_allows_clean_idioms(tmp_path, snippet):
+    root = _mutated_tree(tmp_path)
+    body = "\n".join("    " + line for line in snippet.splitlines())
+    _append(root, "core/flexblock.py", f"\ndef _mutant():\n{body}\n")
+    assert _run("determinism", root) == []
+
+
+# ---------------------------------------------------------------------------
+# corpus property: presets x models, all configs, golden fixtures clean
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("preset", sorted(PRESET_ARCHS))
+@pytest.mark.parametrize("model", sorted(MODEL_BUILDERS))
+def test_corpus_models_validate_clean(preset, model):
+    diags = validate(MODEL_BUILDERS[model](), PRESET_ARCHS[preset]())
+    assert diags == [], [d.message for d in diags]
+
+
+@pytest.mark.parametrize("cfg_name", sorted(all_configs()))
+def test_corpus_configs_validate_clean(cfg_name):
+    w = lm_workload(all_configs()[cfg_name], seq_len=32)
+    diags = validate(w, PRESET_ARCHS["mars"]())
+    assert diags == [], [d.message for d in diags]
+
+
+@pytest.mark.parametrize("fixture", FIXTURES, ids=lambda p: p.stem)
+def test_corpus_trace_fixtures_validate_clean(fixture):
+    from repro.trace.ir import TraceGraph
+    from repro.trace.lower import lower_graph
+    w = lower_graph(TraceGraph.load(fixture))
+    diags = validate(w)
+    assert diags == [], [d.message for d in diags]
+
+
+def test_golden_fixture_count_still_five():
+    assert len(FIXTURES) == 5
