@@ -1,0 +1,106 @@
+"""Observability overhead benchmark (jax-free, informational).
+
+The ``repro.obs`` hooks are compiled into the explore hot path
+(``evaluate_job`` spans, run heartbeats, energy-CSV emission), so their
+cost when *disabled* — the default for every cache-keyed production
+sweep — must stay negligible.  Rows:
+
+* ``disabled/<entry>`` — ns per call of each disabled entry point
+  (``span``/``counter``/``event``/``heartbeat.tick``); these are the
+  no-op object paths every un-instrumented run pays.
+* ``sweep/off`` / ``sweep/on`` — one identical mini sparsity sweep
+  (fresh runner each, no shared cache) with recording off and on; the
+  ``on`` row carries the end-to-end ``overhead_pct`` of *enabled*
+  recording (file writes included — expected small but nonzero).
+* ``overhead/disabled`` — the pinned number: estimated disabled-mode
+  overhead as a fraction of the sweep, ``hook_calls x ns_per_call /
+  sweep_wall``.  The acceptance bar is < 2 %; measured values sit
+  around 0.01 %, so this row is an early-warning canary, not a tight
+  gate.
+
+The suite is new relative to the committed ``BENCH_baseline.json``, so
+``compare.py`` reports it as informational until a refreshed baseline
+lands.
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+from pathlib import Path
+from typing import Dict, List
+
+from repro import obs
+from repro.core import (TABLE_II_PATTERNS, default_mapping, resnet18,
+                        usecase_arch)
+from repro.explore import SweepRunner, sparsity_sweep
+
+__all__ = ["run"]
+
+_NOOP_REPEATS = 200_000
+_RATIOS = (0.6, 0.7, 0.8)
+
+
+def _pattern_factory(r):
+    return TABLE_II_PATTERNS(r, c_in=16)
+
+
+def _mini_sweep() -> float:
+    """One cold mini sparsity sweep; returns wall seconds and the point
+    count via the runner stats (fresh runner — no cross-run cache)."""
+    arch = usecase_arch(4)
+    runner = SweepRunner(workers=1)
+    t0 = time.perf_counter()
+    sparsity_sweep(arch, lambda: resnet18(32), {}, ratios=_RATIOS,
+                   mapping=default_mapping(arch),
+                   pattern_factory=_pattern_factory, runner=runner)
+    return time.perf_counter() - t0, runner.stats.evaluated
+
+
+def _noop_ns(fn) -> float:
+    t0 = time.perf_counter()
+    for _ in range(_NOOP_REPEATS):
+        fn()
+    return (time.perf_counter() - t0) / _NOOP_REPEATS * 1e9
+
+
+def run() -> List[Dict]:
+    obs.disable()
+    rows: List[Dict] = []
+
+    hb = obs.heartbeat("bench", total=1)
+    entries = {
+        "span": lambda: obs.span("bench.x", k=1),
+        "counter": lambda: obs.counter("bench.c"),
+        "event": lambda: obs.event("bench.e"),
+        "heartbeat.tick": lambda: hb.tick(1),
+    }
+    ns: Dict[str, float] = {}
+    for name, fn in entries.items():
+        ns[name] = _noop_ns(fn)
+        rows.append({"name": f"disabled/{name}",
+                     "us_per_call": ns[name] / 1e3,
+                     "ns_per_call": round(ns[name], 1)})
+
+    # warm the process-wide tile-grid memo so off/on see the same cache
+    # state (the first sweep in a process is always the cold one)
+    _mini_sweep()
+    off_s, evaluated = _mini_sweep()
+    rows.append({"name": "sweep/off", "us_per_call": off_s * 1e6,
+                 "wall_s": round(off_s, 4), "evaluated": evaluated})
+
+    with tempfile.TemporaryDirectory() as td:
+        with obs.enabled(Path(td) / "bench"):
+            on_s, _ = _mini_sweep()
+    rows.append({"name": "sweep/on", "us_per_call": on_s * 1e6,
+                 "wall_s": round(on_s, 4),
+                 "overhead_pct": round((on_s - off_s) / off_s * 100, 2)})
+
+    # the pinned number: disabled-mode hook cost as a share of the sweep.
+    # evaluate_job wraps each point in one span; the run loop ticks the
+    # heartbeat once per point — 2 hook calls per evaluated point.
+    hook_s = evaluated * (ns["span"] + ns["heartbeat.tick"]) / 1e9
+    rows.append({"name": "overhead/disabled",
+                 "us_per_call": hook_s * 1e6,
+                 "pct_of_sweep": round(hook_s / off_s * 100, 4),
+                 "budget_pct": 2.0})
+    return rows

@@ -35,6 +35,13 @@ Codes
   fields generically, so new fields would silently skip the digest.
 * ``CIM204`` (error) — ``CACHE_SCHEMA`` has no matching ``# N:`` history
   entry for its current value.
+* ``CIM205`` (error) — observability leaking into the cache key: an
+  ``ExploreJob`` field or ``simulate()`` parameter named after the obs
+  plane (``*obs*``), or ``explore/job.py`` importing ``repro.obs`` at
+  all.  ``repro.obs`` is observational-only (it may read wall clocks,
+  see the determinism pass waiver) — if any obs-derived value entered
+  ``canonical()``, cache keys would vary run to run and the memoisation
+  contract would dissolve.
 """
 from __future__ import annotations
 
@@ -137,10 +144,11 @@ def _history_entries(lines: List[str], assign_lineno: int) -> Set[int]:
 @register
 class CacheKeyPass(AnalysisPass):
     name = "cache-key"
-    codes = ("CIM200", "CIM201", "CIM202", "CIM203", "CIM204")
+    codes = ("CIM200", "CIM201", "CIM202", "CIM203", "CIM204", "CIM205")
     description = ("every simulate() knob must flow through ExploreJob, "
-                   "canonical() must hash fields generically, and "
-                   "CACHE_SCHEMA history must cover the current value")
+                   "canonical() must hash fields generically, "
+                   "CACHE_SCHEMA history must cover the current value, "
+                   "and nothing obs-derived may enter the key")
 
     def _missing(self, what: str, rel: str) -> Diagnostic:
         return self.diag(
@@ -229,6 +237,47 @@ class CacheKeyPass(AnalysisPass):
                 file=job_rel, line=canonical.lineno,
                 hint="hash dataclasses via their full sorted field set; "
                      "hand-maintained field lists rot"))
+
+        # CIM205 — nothing obs-derived may enter the cache key.  Two
+        # shapes of the leak: (a) a field/parameter named after the obs
+        # plane, (b) explore/job.py importing repro.obs (even lazily —
+        # the key module has no observational business at all).
+        for name, lineno, rel in (
+                [(n, ln, job_rel) for n, ln in sorted(fields.items())]
+                + [(n, ln, cost_rel) for n, ln in sorted(params.items())]):
+            if "obs" in name.lower().split("_") or name.lower() == "obs":
+                diags.append(self.diag(
+                    "CIM205", Severity.ERROR,
+                    f"obs-derived name {name!r} in the cache-key surface "
+                    f"— instrumentation must stay observational",
+                    file=rel, line=lineno,
+                    hint="repro.obs reads wall clocks under a sanctioned "
+                         "waiver; letting its state into ExploreJob/"
+                         "simulate() would make cache keys nondeterministic"))
+        for node in ast.walk(ctx.tree(job_path)):
+            target = ""
+            if isinstance(node, ast.Import):
+                for alias in node.names:
+                    if alias.name.split(".")[:2] == [pkg, "obs"]:
+                        target = alias.name
+            elif isinstance(node, ast.ImportFrom):
+                mod = node.module or ""
+                if node.level > 0:
+                    names = {a.name for a in node.names}
+                    if mod.split(".")[0] == "obs" or (
+                            not mod and "obs" in names):
+                        target = f"{pkg}.obs"
+                elif mod.split(".")[:2] == [pkg, "obs"]:
+                    target = mod
+            if target:
+                diags.append(self.diag(
+                    "CIM205", Severity.ERROR,
+                    f"explore/job.py imports {target} — the cache-key "
+                    f"module must not touch the observability plane",
+                    file=job_rel, line=node.lineno,
+                    hint="record telemetry in the runner/sweeps layer; "
+                         "job.py defines the memoisation contract and "
+                         "stays obs-free by construction"))
 
         # CIM204 — CACHE_SCHEMA history entry for the current value
         schema = _schema_assignment(ctx.tree(job_path))

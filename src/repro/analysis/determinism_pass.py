@@ -17,7 +17,12 @@ Codes
 * ``CIM402`` (error) — wall-clock reads: ``time.time``,
   ``datetime.now``/``utcnow``/``today``.  Monotonic timers
   (``perf_counter`` etc.) are fine — they time work, they don't enter
-  results.
+  results.  **Sanctioned waiver:** modules under ``repro.obs`` may read
+  the wall clock — the observability plane stamps run manifests and
+  run ids (telemetry metadata), it never produces results, and its
+  output is barred from cache keys by CIM205.  The waiver is exactly
+  this prefix; wall-clock reads anywhere else in the scanned packages
+  still fail.
 * ``CIM403`` (error) — builtin ``hash()`` outside ``__hash__``/
   ``__eq__``: salted per process since PEP 456, so never content-stable.
   Use ``hashlib`` digests.
@@ -34,11 +39,18 @@ from typing import Dict, List, Optional, Tuple
 from .diagnostics import Diagnostic, Severity
 from .framework import AnalysisPass, PassContext, register
 
-__all__ = ["DeterminismPass", "SCANNED_PREFIXES"]
+__all__ = ["DeterminismPass", "SCANNED_PREFIXES",
+           "WALL_CLOCK_WAIVED_PREFIXES"]
 
 SCANNED_PREFIXES: Tuple[str, ...] = (
     "repro.core", "repro.explore", "repro.trace", "repro.analysis",
+    "repro.obs",
 )
+
+# Module prefixes where CIM402 (wall-clock reads) is sanctioned: the
+# observability plane stamps manifests/run-ids with wall time but is
+# observational-only (CIM205 keeps its output away from cache keys).
+WALL_CLOCK_WAIVED_PREFIXES: Tuple[str, ...] = ("repro.obs",)
 
 # numpy.random attributes that are deterministic constructors, not
 # legacy global-state draws
@@ -186,6 +198,8 @@ class DeterminismPass(AnalysisPass):
             if not any(module == p or module.startswith(p + ".")
                        for p in SCANNED_PREFIXES):
                 continue
+            wall_waived = any(module == p or module.startswith(p + ".")
+                              for p in WALL_CLOCK_WAIVED_PREFIXES)
             tree = ctx.tree(path)
             scanner = _Scanner(_alias_map(tree))
             # visit sorted() wrappers before their arguments: NodeVisitor
@@ -193,6 +207,8 @@ class DeterminismPass(AnalysisPass):
             scanner.visit(tree)
             rel = ctx.rel(path)
             for code, lineno, msg, hint in scanner.findings:
+                if code == "CIM402" and wall_waived:
+                    continue        # sanctioned: obs stamps telemetry only
                 diags.append(self.diag(code, Severity.ERROR, msg,
                                        file=rel, line=lineno, hint=hint))
         return diags

@@ -5,7 +5,9 @@ imported or executed) and enforces the repo's layering contract:
 
 * **Protected** (modeling plane, must import jax-free):
   ``repro.core``, ``repro.explore``, ``repro.trace``, ``repro.configs``,
-  ``repro.calibrate``, ``repro.analysis``.
+  ``repro.calibrate``, ``repro.analysis``, ``repro.obs`` (the
+  observability plane records modeling-plane runs and must stay
+  importable on the jax-free CI interpreters).
 * **Execution plane** (may import jax eagerly): everything else under
   ``repro`` — ``models``, ``kernels``, ``serve``, ``launch``, ``train``,
   ``runtime``, ``distributed``, ``sparsity``, ``data``.
@@ -44,7 +46,7 @@ __all__ = ["ImportBoundaryPass", "PROTECTED_PREFIXES", "FORBIDDEN_ROOTS",
 # its dotted name equals a prefix or starts with "<prefix>.".
 PROTECTED_PREFIXES: Tuple[str, ...] = (
     "repro.core", "repro.explore", "repro.trace",
-    "repro.configs", "repro.calibrate", "repro.analysis",
+    "repro.configs", "repro.calibrate", "repro.analysis", "repro.obs",
 )
 
 # Import roots the modeling plane must never reach eagerly.

@@ -5,7 +5,7 @@ import dataclasses
 import json
 from typing import Dict, List, Optional
 
-from .schedule import ScheduleResult
+from .schedule import ScheduledOp, ScheduleResult
 
 __all__ = ["OpCost", "CostReport"]
 
@@ -86,18 +86,39 @@ class CostReport:
     def to_json(self, **kw) -> str:
         return json.dumps(self.to_dict(), **kw)
 
+    @classmethod
+    def from_dict(cls, d: dict) -> "CostReport":
+        """Rebuild a report from :meth:`to_dict` output (e.g. a JSON
+        artifact handed to ``python -m repro.obs timeline``)."""
+        d = dict(d)
+        d["op_costs"] = [OpCost(**oc) for oc in d.get("op_costs", [])]
+        sched = d.get("schedule")
+        if sched is not None:
+            sched = dict(sched)
+            sched["ops"] = [ScheduledOp(**so) for so in sched.get("ops", [])]
+            d["schedule"] = ScheduleResult(**sched)
+        known = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in known})
+
     def summary(self) -> str:
         g = self.grouped_energy()
         sched = ""
-        if self.schedule is not None and (
-                self.schedule.policy != "monolithic"
-                or self.schedule.invocations != 1):
-            sched = (f"/{self.schedule.policy}"
-                     f"x{self.schedule.invocations}")
+        sched_line = ""
+        if self.schedule is not None:
+            s = self.schedule
+            if s.policy != "monolithic" or s.invocations != 1:
+                sched = f"/{s.policy}x{s.invocations}"
+            sched_line = (
+                f"\n  schedule[{s.policy}]: "
+                f"critical-path={s.critical_path_cycles:.0f} cyc "
+                f"({s.critical_path_cycles / max(s.makespan_cycles, 1e-12):.0%}"
+                f" of makespan), "
+                f"macro-util={s.macro_time_utilization():.1%}, "
+                f"concurrency={s.concurrency:.2f}x")
         return (f"{self.workload} on {self.arch} [{self.mapping}{sched}]: "
                 f"{self.latency_ms:.3f} ms, {self.total_energy_uj:.2f} uJ, "
                 f"util={self.utilization:.2%}, "
                 f"idx={self.index_storage_bits/8/1024:.1f} KiB, "
                 f"E[macro/buf/prepost/sparse/static]="
                 f"{g['cim_macro']:.2e}/{g['buffers']:.2e}/{g['pre_post']:.2e}/"
-                f"{g['sparsity']:.2e}/{g['static']:.2e} pJ")
+                f"{g['sparsity']:.2e}/{g['static']:.2e} pJ" + sched_line)

@@ -140,6 +140,16 @@ class ScheduleResult:
                 return s
         raise KeyError(name)
 
+    def macro_time_utilization(self) -> float:
+        """Fraction of the organisation's macro-time actually occupied:
+        Σ(macro_share × op duration) / makespan.  1.0 would mean every
+        macro busy for the whole invocation; serial policies on small
+        ops sit far below.  0.0 for an empty/zero-length schedule."""
+        if self.makespan_cycles <= 0:
+            return 0.0
+        busy = sum(s.macro_share * (s.end - s.start) for s in self.ops)
+        return busy / self.makespan_cycles
+
 
 def critical_path(workload: Workload,
                   durations: Dict[str, float]) -> Tuple[List[str], float]:

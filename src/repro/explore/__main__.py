@@ -227,6 +227,14 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--diff-analytic", action="store_true",
                     help="with --profile: also run the analytic twin of "
                          "every row and print the ratios")
+    ap.add_argument("--obs", action="store_true",
+                    help="record sweep telemetry (repro.obs): run "
+                         "manifest, live heartbeats on stderr, per-"
+                         "component energy CSV — observational only, "
+                         "rows and cache keys are unchanged")
+    ap.add_argument("--obs-dir", default=None, metavar="DIR",
+                    help="trace directory for --obs (default "
+                         "obs_runs/<run-id>)")
     ap.add_argument("--schedule", default=None, metavar="POLICIES",
                     help="rerun the sweep across multi-macro scheduling "
                          "policies (comma list from "
@@ -236,6 +244,14 @@ def main(argv: Optional[List[str]] = None) -> int:
                     help="repeated DAG executions per evaluation (resident "
                          "amortises its weight preload across them)")
     args = ap.parse_args(argv)
+
+    observer = None
+    if args.obs or args.obs_dir:
+        from .. import obs
+        observer = obs.enable(args.obs_dir, echo=True,
+                              manifest={"cli": "repro.explore",
+                                        "sweep": args.sweep})
+        print(f"obs: recording to {observer.dir}", file=sys.stderr)
 
     profile = None
     if args.profile is not None:
@@ -350,7 +366,15 @@ def main(argv: Optional[List[str]] = None) -> int:
     result = run_policies(profile)
     if args.diff_analytic:
         _print_diff(result.rows, run_policies(None).rows)
-    return _finish(result, args)
+    status = _finish(result, args)
+    if observer is not None:
+        ecsv = observer.artifact_path("energy_components.csv")
+        print(f"obs: trace recorded to {observer.dir}"
+              + (f" (energy CSV: {ecsv})" if ecsv.exists() else ""),
+              file=sys.stderr)
+        print(f"obs: inspect with `python -m repro.obs report "
+              f"{observer.dir}`", file=sys.stderr)
+    return status
 
 
 if __name__ == "__main__":

@@ -36,6 +36,7 @@ from typing import Dict, List, Optional, Sequence, Union
 from ..core import mapping as _mapping
 from ..core.costmodel import simulate
 from ..core.report import CostReport
+from .. import obs
 from .cache import ResultCache
 from .job import ExploreJob
 
@@ -43,14 +44,23 @@ __all__ = ["evaluate_job", "SweepRunner", "RunStats"]
 
 
 def evaluate_job(job: ExploreJob) -> CostReport:
-    """Evaluate one job.  Module-level so worker processes can import it."""
-    return simulate(
-        job.arch, job.workload, job.mapping,
-        input_sparsity=dict(job.input_sparsity) if job.input_sparsity else None,
-        masks=dict(job.masks) if job.masks else None,
-        profile=job.profile,
-        schedule=job.schedule,
-    )
+    """Evaluate one job.  Module-level so worker processes can import it.
+
+    The obs span is observational-only (a no-op object when recording is
+    off) and runs in *this* process — pool workers auto-attach to the
+    parent's trace directory via ``REPRO_OBS_DIR`` and write their own
+    ``events-<pid>.jsonl``, so per-job spans line up with the parent's
+    run span on one monotonic clock."""
+    with obs.span("explore.evaluate_job", key=job.key[:16],
+                  workload=job.workload.name, kind=job.kind):
+        return simulate(
+            job.arch, job.workload, job.mapping,
+            input_sparsity=(dict(job.input_sparsity)
+                            if job.input_sparsity else None),
+            masks=dict(job.masks) if job.masks else None,
+            profile=job.profile,
+            schedule=job.schedule,
+        )
 
 
 def _init_worker(tile_cache_capacity: Optional[int]) -> None:
@@ -189,6 +199,10 @@ class SweepRunner:
         tg = _mapping.default_tile_cache()
         tg_h0, tg_m0 = tg.hits, tg.misses
         if pending:
+            # telemetry (no-ops when recording is off): rate-limited
+            # heartbeats with points/s + ETA as evaluations complete
+            hb = obs.heartbeat("explore.run", total=len(pending))
+            done = 0
             if self.workers > 1 and len(pending) > 1:
                 pool = self._get_pool()
                 chunk = max(1, len(pending) // (self.workers * 4))
@@ -196,9 +210,13 @@ class SweepRunner:
                                     pool.map(evaluate_job, pending,
                                              chunksize=chunk)):
                     results[job.key] = rep
+                    done += 1
+                    hb.tick(done, workers=self.workers)
             else:
                 for job in pending:
                     results[job.key] = evaluate_job(job)
+                    done += 1
+                    hb.tick(done, workers=1)
             for job in pending:
                 self.cache.put(job.key, results[job.key])
         stats.evaluated = len(pending)
@@ -212,4 +230,10 @@ class SweepRunner:
         # lifetime, not the sum of per-batch uniques
         self.stats.unique = len(self._seen_keys)
         self.last_stats = stats
+        observer = obs.get_observer()
+        if observer is not None:
+            # one record per run() call in the run manifest, plus an
+            # aggregate event so `repro.obs report` needs no special case
+            observer.append_jsonl("runs.jsonl", stats.as_dict())
+            obs.event("explore.run.done", **stats.as_dict())
         return [results[job.key] for job in jobs]

@@ -19,6 +19,7 @@ import json
 from pathlib import Path
 from typing import (Callable, Dict, List, Optional, Sequence, Tuple, Union)
 
+from .. import obs
 from ..analysis import preflight
 from ..calibrate.profile import CalibrationProfile
 from ..core.costmodel import compare
@@ -138,6 +139,16 @@ def run_grid(points: Sequence[GridPoint], *,
                    rep, compare(rep, dense))
         row.update(meta)
         rows.append(row)
+    observer = obs.get_observer()
+    if observer is not None:
+        # observational artifact only: per-component energy attribution
+        # for every sparse point, long-format, one CSV per recorded run
+        from ..obs.energy import append_energy_csv, component_rows
+        erows: List[Dict] = []
+        for i, p in enumerate(points):
+            erows.extend(component_rows(reports[2 * i], meta=dict(p.meta)))
+        append_energy_csv(
+            erows, observer.artifact_path("energy_components.csv"))
     return SweepResult(rows=rows, stats=runner.last_stats)
 
 

@@ -45,6 +45,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from .. import obs
 from ..configs import all_configs, cells_for, get_config
 from ..configs.base import ArchConfig, ShapeCell, SHAPE_CELLS
 from ..distributed import sharding as shard_rules
@@ -326,12 +327,18 @@ def run_cell(arch: str, cell_name: str, mesh_kind: str, *,
     n_chips = 512 if multi_pod else 256
 
     # --- full-size compile: THE dry-run proof + memory analysis -----------
+    # (obs spans are no-ops unless recording is enabled; the ledger's
+    # lower_s/compile_s fields below stay the source of truth)
     t0 = time.time()
-    lowered = lower_cell(cfg, cell, mesh, multi_pod=multi_pod, remat=remat,
-                         microbatches=microbatches, remat_policy=remat_policy)
+    with obs.span("dryrun.lower", arch=arch, cell=cell_name, mesh=mesh_kind):
+        lowered = lower_cell(cfg, cell, mesh, multi_pod=multi_pod,
+                             remat=remat, microbatches=microbatches,
+                             remat_policy=remat_policy)
     t_lower = time.time() - t0
     t0 = time.time()
-    compiled = lowered.compile()
+    with obs.span("dryrun.compile", arch=arch, cell=cell_name,
+                  mesh=mesh_kind):
+        compiled = lowered.compile()
     t_compile = time.time() - t0
     mem = compiled.memory_analysis()
     flops_raw, bytes_raw, coll_raw = _cost_of(compiled)
@@ -348,7 +355,9 @@ def run_cell(arch: str, cell_name: str, mesh_kind: str, *,
             structs = (params_t, specs)
         else:
             structs = (params_t, specs["tokens"], specs["cache"])
-        timing = _execute_cell(compiled, structs, cell.kind, execute)
+        with obs.span("dryrun.execute", arch=arch, cell=cell_name,
+                      mesh=mesh_kind, repeats=execute):
+            timing = _execute_cell(compiled, structs, cell.kind, execute)
 
     # --- per-layer extrapolation via unrolled L=1 / L=2 variants -----------
     from ..models import layers as _ly
@@ -546,6 +555,9 @@ def main(argv=None) -> int:
                    "tag": args.tag, "error": f"{type(e).__name__}: {e}"}
             failures += 1
             print(f"    FAILED: {rec['error'][:300]}", flush=True)
+        obs.event("dryrun.cell.done", arch=arch, cell=cell_name, mesh=mk,
+                  ok="error" not in rec,
+                  compile_s=rec.get("compile_s"), time_s=rec.get("time_s"))
         with open(args.out, "a") as f:
             f.write(json.dumps(rec) + "\n")
     return 1 if failures else 0

@@ -10,6 +10,7 @@ pattern for TPU serving.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Callable, Dict, List, Optional
 
 import numpy as np
@@ -17,8 +18,10 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from .. import obs
 from ..configs.base import ArchConfig
 from ..models.transformer import decode_step, forward, init_cache, prefill
+from ..obs.metrics import ServeMetrics
 
 __all__ = ["Request", "ServeEngine"]
 
@@ -31,6 +34,8 @@ class Request:
     # filled by the engine:
     output: Optional[List[int]] = None
     done: bool = False
+    # telemetry (observational only): monotonic submit time, for TTFT
+    submit_t: Optional[float] = None
 
 
 class ServeEngine:
@@ -55,11 +60,18 @@ class ServeEngine:
         self._decode = jax.jit(
             lambda p, t, c: decode_step(p, t, cfg, c))
         self._last_tokens = np.zeros(slots, np.int32)
+        # cumulative across the engine's lifetime; run() additionally
+        # leaves a per-call delta in ``last_stats`` (mirroring the sweep
+        # engine's RunStats split)
+        self.metrics = ServeMetrics()
+        self.last_stats: Dict[str, Any] = {}
 
     # -- request management --------------------------------------------------
     def submit(self, req: Request) -> None:
         req.output = []
+        req.submit_t = time.monotonic()
         self.queue.append(req)
+        self.metrics.on_submit()
 
     def _fill_slots(self) -> None:
         for s in range(self.slots):
@@ -95,10 +107,15 @@ class ServeEngine:
         self.slot_req[s] = req
         self.slot_remaining[s] = req.max_new_tokens - 1
         self.slot_pos[s] = S
+        self.metrics.on_scheduled()
+        self.metrics.tokens_generated += 1       # the prefill's first token
+        if req.submit_t is not None:
+            self.metrics.on_first_token(time.monotonic() - req.submit_t)
 
     # -- decoding ------------------------------------------------------------
     def step(self) -> int:
         """Decode one token for all active slots; returns #active."""
+        t0 = time.monotonic()
         self._fill_slots()
         active = [s for s in range(self.slots) if self.slot_req[s] is not None]
         if not active:
@@ -108,6 +125,7 @@ class ServeEngine:
         tokens = jnp.asarray(self._last_tokens)
         logits, self.cache = self._decode(self.params, tokens, self.cache)
         next_tokens = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        completed = 0
         for s in active:
             req = self.slot_req[s]
             tok = int(next_tokens[s])
@@ -119,9 +137,38 @@ class ServeEngine:
                     or self.slot_pos[s] >= self.max_len - 1):
                 req.done = True
                 self.slot_req[s] = None
+                completed += 1
+        step_s = time.monotonic() - t0
+        m = self.metrics
+        m.on_step(len(active), step_s)
+        m.on_tokens(len(active), step_s)
+        for _ in range(completed):
+            m.on_complete()
+        obs.counter("serve.step", len(active),
+                    queue_depth=m.queue_depth, completed=completed)
         return len(active)
 
     def run(self) -> None:
-        """Drain queue + slots."""
+        """Drain queue + slots; leaves this call's deltas in
+        ``last_stats`` (``metrics`` keeps cumulating across calls)."""
+        m = self.metrics
+        before = (m.steps, m.tokens_generated, m.requests_completed, m.busy_s)
+        t0 = time.monotonic()
         while self.queue or any(r is not None for r in self.slot_req):
             self.step()
+        self.last_stats = {
+            "steps": m.steps - before[0],
+            "tokens_generated": m.tokens_generated - before[1],
+            "requests_completed": m.requests_completed - before[2],
+            "busy_s": m.busy_s - before[3],
+            "wall_s": time.monotonic() - t0,
+        }
+
+    # -- exposition ----------------------------------------------------------
+    def stats_snapshot(self) -> Dict[str, Any]:
+        """Cumulative metrics as a JSON-able dict (queue depth, TTFT and
+        per-token latency p50/p99, tokens/s, …)."""
+        return self.metrics.snapshot()
+
+    def stats_text(self) -> str:
+        return self.metrics.render_text()

@@ -223,6 +223,34 @@ def test_cachekey_anchors_present_or_cim200(tmp_path):
     assert "CIM200" in _codes(diags)
 
 
+def test_cachekey_catches_obs_named_job_field(tmp_path):
+    root = _mutated_tree(tmp_path)
+    _sub(root, "explore/job.py",
+         "kind: str                                   # 'simulate' | 'dense'",
+         "kind: str                                   # 'simulate' | 'dense'"
+         "\n    obs_tag: str = 'x'")
+    diags = _run("cache-key", root)
+    assert "CIM205" in _codes(diags)
+    assert any("obs_tag" in d.message for d in diags)
+
+
+def test_cachekey_catches_obs_named_simulate_param(tmp_path):
+    root = _mutated_tree(tmp_path)
+    _sub(root, "core/costmodel.py",
+         "def simulate(",
+         "def simulate(*, obs_sink=None):\n    pass\n"
+         "def _old_simulate(")
+    assert "CIM205" in _codes(_run("cache-key", root))
+
+
+def test_cachekey_catches_obs_import_in_job_module(tmp_path):
+    root = _mutated_tree(tmp_path)
+    _append(root, "explore/job.py", "\nfrom .. import obs  # noqa\n")
+    diags = _run("cache-key", root)
+    assert _codes(diags) == ["CIM205"]
+    assert any("obs" in d.message for d in diags)
+
+
 # ---------------------------------------------------------------------------
 # pass 3: model-plane validation (live-object goldens)
 # ---------------------------------------------------------------------------
@@ -386,6 +414,36 @@ def test_determinism_allows_clean_idioms(tmp_path, snippet):
     body = "\n".join("    " + line for line in snippet.splitlines())
     _append(root, "core/flexblock.py", f"\ndef _mutant():\n{body}\n")
     assert _run("determinism", root) == []
+
+
+def test_determinism_wall_clock_waived_inside_obs_only(tmp_path):
+    """CIM402 is sanctioned under repro.obs (telemetry stamps), nowhere
+    else — the same mutant fails in core/."""
+    root = _mutated_tree(tmp_path)
+    mutant = "\ndef _mutant():\n    import time\n    t = time.time()\n"
+    _append(root, "obs/core.py", mutant)
+    assert _run("determinism", root) == []
+    _append(root, "core/flexblock.py", mutant)
+    assert _codes(_run("determinism", root)) == ["CIM402"]
+
+
+def test_determinism_other_codes_not_waived_in_obs(tmp_path):
+    root = _mutated_tree(tmp_path)
+    _append(root, "obs/core.py",
+            "\ndef _mutant():\n    h = hash((1, 2))\n")
+    assert _codes(_run("determinism", root)) == ["CIM403"]
+
+
+def test_boundary_protects_obs(tmp_path):
+    root = _mutated_tree(tmp_path)
+    _append(root, "obs/core.py", "\nimport jax\n")
+    diags = _run("import-boundary", root)
+    codes = _codes(diags)
+    # CIM101 on obs/core itself; the taint then propagates CIM102 to
+    # every protected module that eagerly imports repro.obs
+    assert "CIM101" in codes
+    assert any("repro.obs.core" in d.message and d.code == "CIM101"
+               for d in diags)
 
 
 # ---------------------------------------------------------------------------

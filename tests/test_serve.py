@@ -72,3 +72,59 @@ def test_heterogeneous_prompt_lengths(params):
     engine.run()
     assert ra.output == _greedy_reference(params, pa, 5)
     assert rb.output == _greedy_reference(params, pb, 5)
+
+
+def test_engine_metrics_cumulative_vs_last_stats(params):
+    """metrics accumulates across run() calls; last_stats is per-call."""
+    rng = np.random.default_rng(3)
+
+    def _submit(engine, n, toks):
+        reqs = [Request(prompt=rng.integers(0, CFG.vocab_size, size=4)
+                        .astype(np.int32), max_new_tokens=toks)
+                for _ in range(n)]
+        for r in reqs:
+            engine.submit(r)
+        return reqs
+
+    engine = ServeEngine(CFG, params, slots=2, max_len=48)
+    _submit(engine, 3, 4)
+    engine.run()
+    first = dict(engine.last_stats)
+    assert first["requests_completed"] == 3
+    assert first["tokens_generated"] == 3 * 4     # prefill token + decodes
+    assert first["steps"] > 0 and first["wall_s"] > 0
+    snap1 = engine.stats_snapshot()
+    assert snap1["requests"] == {"submitted": 3, "completed": 3,
+                                 "queue_depth": 0}
+    assert snap1["ttft_s"]["count"] == 3
+    assert snap1["token_latency_s"]["count"] > 0
+
+    _submit(engine, 2, 3)
+    engine.run()
+    # last_stats covers only the second call...
+    assert engine.last_stats["requests_completed"] == 2
+    assert engine.last_stats["tokens_generated"] == 2 * 3
+    # ...while the engine-lifetime metrics keep cumulating
+    snap2 = engine.stats_snapshot()
+    assert snap2["requests"] == {"submitted": 5, "completed": 5,
+                                 "queue_depth": 0}
+    assert snap2["tokens_generated"] == 3 * 4 + 2 * 3
+    assert snap2["steps"] == first["steps"] + engine.last_stats["steps"]
+    assert snap2["ttft_s"]["count"] == 5
+    text = engine.stats_text()
+    assert "serve.requests submitted=5 completed=5" in text
+    assert "p99" in text
+
+
+def test_engine_metrics_do_not_change_outputs(params):
+    """Instrumented engine output still matches the batch-1 reference."""
+    rng = np.random.default_rng(4)
+    p = rng.integers(0, CFG.vocab_size, size=6).astype(np.int32)
+    engine = ServeEngine(CFG, params, slots=1, max_len=48)
+    r = Request(prompt=p, max_new_tokens=4)
+    engine.submit(r)
+    engine.run()
+    assert r.output == _greedy_reference(params, p, 4)
+    snap = engine.stats_snapshot()
+    assert snap["ttft_s"]["p50"] > 0
+    assert snap["tokens_per_s"] > 0
