@@ -1,0 +1,106 @@
+"""Fault-injection hook overhead benchmark (jax-free, informational).
+
+The fault-tolerance layer compiles two hooks into hot paths:
+``faults.maybe_fail`` inside every ``evaluate_job`` call and
+``faults.corrupt_payload`` inside every ``ResultStore.put``.  With no
+plan installed — the default for every production sweep — each is a
+single module-global ``None`` check, and this suite pins that
+disabled-mode cost under the same <2 % budget discipline as the obs
+canary (``benchmarks/obs_overhead.py``).  Rows:
+
+* ``disabled/<entry>`` — ns per call of each disabled hook.
+* ``sweep/off`` — one cold mini sparsity sweep with no plan installed
+  (the denominator).
+* ``sweep/faulted`` — the same sweep under an installed exc-fault plan
+  with retries absorbing the injected failures; informational, shows
+  what chaos-mode actually costs.
+* ``overhead/disabled`` — the pinned number: estimated disabled-mode
+  hook cost as a fraction of the sweep (1 ``maybe_fail`` per evaluated
+  point), with ``budget_pct: 2.0``.
+
+The suite is new relative to the committed ``BENCH_baseline.json``, so
+``compare.py`` reports it as informational until a refreshed baseline
+lands.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+from repro.core import (TABLE_II_PATTERNS, default_mapping, resnet18,
+                        usecase_arch)
+from repro.explore import SweepRunner, faults, sparsity_sweep
+
+__all__ = ["run"]
+
+_NOOP_REPEATS = 200_000
+_RATIOS = (0.6, 0.7, 0.8)
+
+
+def _pattern_factory(r):
+    return TABLE_II_PATTERNS(r, c_in=16)
+
+
+def _mini_sweep() -> float:
+    """One cold mini sparsity sweep; returns wall seconds and the point
+    count via the runner stats (fresh runner — no cross-run cache)."""
+    arch = usecase_arch(4)
+    runner = SweepRunner(workers=1, backoff_s=0.0)
+    t0 = time.perf_counter()
+    sparsity_sweep(arch, lambda: resnet18(32), {}, ratios=_RATIOS,
+                   mapping=default_mapping(arch),
+                   pattern_factory=_pattern_factory, runner=runner)
+    return time.perf_counter() - t0, runner.stats.evaluated
+
+
+def _noop_ns(fn) -> float:
+    t0 = time.perf_counter()
+    for _ in range(_NOOP_REPEATS):
+        fn()
+    return (time.perf_counter() - t0) / _NOOP_REPEATS * 1e9
+
+
+def run() -> List[Dict]:
+    faults.uninstall()
+    rows: List[Dict] = []
+
+    key = "ab" * 32
+    payload = b"x" * 4096
+    entries = {
+        "maybe_fail": lambda: faults.maybe_fail(key, 0),
+        "corrupt_payload": lambda: faults.corrupt_payload(key, payload),
+    }
+    ns: Dict[str, float] = {}
+    for name, fn in entries.items():
+        ns[name] = _noop_ns(fn)
+        rows.append({"name": f"disabled/{name}",
+                     "us_per_call": ns[name] / 1e3,
+                     "ns_per_call": round(ns[name], 1)})
+
+    # warm the process-wide tile-grid memo so off/faulted see the same
+    # cache state (the first sweep in a process is always the cold one)
+    _mini_sweep()
+    off_s, evaluated = _mini_sweep()
+    rows.append({"name": "sweep/off", "us_per_call": off_s * 1e6,
+                 "wall_s": round(off_s, 4), "evaluated": evaluated})
+
+    # informational: the same sweep with transient faults actually
+    # firing (sequential path, retries absorb every failure)
+    faults.install("seed=11,exc=0.3,times=1", export_env=False)
+    try:
+        faulted_s, _ = _mini_sweep()
+    finally:
+        faults.uninstall()
+    rows.append({"name": "sweep/faulted", "us_per_call": faulted_s * 1e6,
+                 "wall_s": round(faulted_s, 4),
+                 "overhead_pct": round((faulted_s - off_s) / off_s * 100, 2)})
+
+    # the pinned number: disabled-mode hook cost as a share of the sweep
+    # (evaluate_job calls maybe_fail once per evaluated point; store
+    # writes add one corrupt_payload per point when a store is attached)
+    hook_s = evaluated * (ns["maybe_fail"] + ns["corrupt_payload"]) / 1e9
+    rows.append({"name": "overhead/disabled",
+                 "us_per_call": hook_s * 1e6,
+                 "pct_of_sweep": round(hook_s / off_s * 100, 4),
+                 "budget_pct": 2.0})
+    return rows

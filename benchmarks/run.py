@@ -37,9 +37,9 @@ import statistics
 import time
 from typing import Dict, List
 
-from . import (analysis_preflight, mapping_exploration, obs_overhead,
-               runtime_analysis, schedule_exploration, sparsity_exploration,
-               traced_lm, validation)
+from . import (analysis_preflight, fault_overhead, mapping_exploration,
+               obs_overhead, runtime_analysis, schedule_exploration,
+               sparsity_exploration, traced_lm, validation)
 
 SUITES = {
     "validation": validation.run,
@@ -50,6 +50,7 @@ SUITES = {
     "traced_lm": traced_lm.run,
     "analysis": analysis_preflight.run,
     "obs": obs_overhead.run,
+    "faults": fault_overhead.run,
 }
 
 # suites built on the repro.explore engine accept a worker count

@@ -42,6 +42,16 @@ Codes
   see the determinism pass waiver) — if any obs-derived value entered
   ``canonical()``, cache keys would vary run to run and the memoisation
   contract would dissolve.
+* ``CIM206`` (error) — execution policy leaking into the cache key: an
+  ``ExploreJob`` field or ``simulate()`` parameter with a fault/retry/
+  timeout/backoff name, or ``explore/job.py`` importing
+  ``repro.explore.faults``.  Retry budgets, timeouts and fault plans
+  change how a sweep *executes*, never what a job *computes* — they are
+  runner-level knobs by contract (``SweepRunner(timeout_s=…,
+  max_retries=…)``), and if one entered ``canonical()``, identical
+  simulations run under different robustness settings would stop
+  sharing cache entries (and a fault-injected chaos run would poison
+  the fault-free cache namespace).
 """
 from __future__ import annotations
 
@@ -62,6 +72,11 @@ NON_SEMANTIC_SIMULATE_PARAMS = frozenset({"tile_cache"})
 # ExploreJob fields that deliberately aren't forwarded to simulate()
 # (consumed by evaluate_job's own dispatch instead).
 NON_FORWARDED_JOB_FIELDS = frozenset({"kind"})
+
+# name tokens that mark an execution-policy knob (CIM206): these belong
+# on SweepRunner, never on the cache-key surface
+_FAULT_TOKENS = frozenset({"fault", "faults", "retry", "retries",
+                           "timeout", "timeouts", "backoff"})
 
 _HISTORY_RE = re.compile(r"^\s*#\s*(\d+)\s*:")
 
@@ -144,11 +159,13 @@ def _history_entries(lines: List[str], assign_lineno: int) -> Set[int]:
 @register
 class CacheKeyPass(AnalysisPass):
     name = "cache-key"
-    codes = ("CIM200", "CIM201", "CIM202", "CIM203", "CIM204", "CIM205")
+    codes = ("CIM200", "CIM201", "CIM202", "CIM203", "CIM204", "CIM205",
+             "CIM206")
     description = ("every simulate() knob must flow through ExploreJob, "
                    "canonical() must hash fields generically, "
                    "CACHE_SCHEMA history must cover the current value, "
-                   "and nothing obs-derived may enter the key")
+                   "and nothing obs- or fault-policy-derived may enter "
+                   "the key")
 
     def _missing(self, what: str, rel: str) -> Diagnostic:
         return self.diag(
@@ -278,6 +295,52 @@ class CacheKeyPass(AnalysisPass):
                     hint="record telemetry in the runner/sweeps layer; "
                          "job.py defines the memoisation contract and "
                          "stays obs-free by construction"))
+
+        # CIM206 — execution policy may not enter the cache key.  Same
+        # two leak shapes as CIM205: (a) a fault/retry/timeout/backoff-
+        # named field or parameter, (b) explore/job.py importing the
+        # fault-injection harness (repro.explore.faults).
+        for name, lineno, rel in (
+                [(n, ln, job_rel) for n, ln in sorted(fields.items())]
+                + [(n, ln, cost_rel) for n, ln in sorted(params.items())]):
+            tokens = set(name.lower().split("_")) | {name.lower()}
+            if tokens & _FAULT_TOKENS:
+                diags.append(self.diag(
+                    "CIM206", Severity.ERROR,
+                    f"execution-policy name {name!r} in the cache-key "
+                    f"surface — fault/retry/timeout knobs are "
+                    f"runner-level by contract",
+                    file=rel, line=lineno,
+                    hint="put the knob on SweepRunner (timeout_s, "
+                         "max_retries, backoff_s, failure_mode) or in a "
+                         "FaultPlan; a job's key must not vary with how "
+                         "robustly the sweep executes it"))
+        for node in ast.walk(ctx.tree(job_path)):
+            target = ""
+            if isinstance(node, ast.Import):
+                for alias in node.names:
+                    if alias.name.split(".")[:3] == [pkg, "explore",
+                                                     "faults"]:
+                        target = alias.name
+            elif isinstance(node, ast.ImportFrom):
+                mod = node.module or ""
+                if node.level > 0:
+                    names = {a.name for a in node.names}
+                    if mod.split(".")[0] == "faults" or (
+                            not mod and "faults" in names):
+                        target = f"{pkg}.explore.faults"
+                elif mod.split(".")[:3] == [pkg, "explore", "faults"]:
+                    target = mod
+            if target:
+                diags.append(self.diag(
+                    "CIM206", Severity.ERROR,
+                    f"explore/job.py imports {target} — the cache-key "
+                    f"module must not touch the fault-injection plane",
+                    file=job_rel, line=node.lineno,
+                    hint="inject faults in the runner/cache layer "
+                         "(evaluate_job, ResultStore.put); job.py "
+                         "defines the memoisation contract and stays "
+                         "fault-free by construction"))
 
         # CIM204 — CACHE_SCHEMA history entry for the current value
         schema = _schema_assignment(ctx.tree(job_path))

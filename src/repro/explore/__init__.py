@@ -15,17 +15,24 @@ and emits CSV/JSON (see ``--help``).
 The legacy ``repro.core.explorer`` sweeps remain as thin compatibility
 wrappers over this engine.
 """
-from .cache import CacheStats, ResultCache
+from . import faults
+from .cache import (STORE_SCHEMA, CacheStats, KeyJournal, ResultCache,
+                    ResultStore, StoreError)
+from .faults import FaultError, FaultPlan, parse_fault_spec
 from .job import CACHE_SCHEMA, ExploreJob, canonical, content_key
 from .pareto import DEFAULT_OBJECTIVES, pareto_front, top_k
-from .runner import RunStats, SweepRunner, evaluate_job
+from .runner import (JobFailure, RunStats, SweepFailure, SweepRunner,
+                     evaluate_job)
 from .sweeps import (GridPoint, SweepResult, mapping_sweep, org_sweep,
                      run_grid, schedule_sweep, sparsity_sweep)
 
 __all__ = [
     "CACHE_SCHEMA", "ExploreJob", "canonical", "content_key",
-    "CacheStats", "ResultCache",
+    "CacheStats", "ResultCache", "ResultStore", "KeyJournal",
+    "StoreError", "STORE_SCHEMA",
     "RunStats", "SweepRunner", "evaluate_job",
+    "JobFailure", "SweepFailure",
+    "faults", "FaultPlan", "FaultError", "parse_fault_spec",
     "GridPoint", "SweepResult", "run_grid",
     "sparsity_sweep", "mapping_sweep", "org_sweep", "schedule_sweep",
     "DEFAULT_OBJECTIVES", "pareto_front", "top_k",

@@ -33,11 +33,28 @@ batches) so the resident policy's weight-pinning amortisation shows up::
         --schedule all
     python -m repro.explore lm --config llama3-8b --schedule \
         monolithic,resident --invocations 16
+
+Fault tolerance (see ``docs/robustness.md``): ``--run-dir DIR`` makes
+the sweep durable — a crash-safe result store, a completed-keys
+journal, and a ``sweep.json`` manifest land in DIR, every finished
+point is committed immediately, and after any crash (even SIGKILL)
+``--resume DIR`` replays the recorded invocation, re-evaluating only
+the missing points.  ``--timeout`` / ``--retries`` / ``--backoff``
+bound individual job failures; ``--degrade`` keeps going past
+quarantined jobs (their rows are marked ``failed``) instead of exiting
+non-zero.  ``--check-store DIR`` audits a run directory::
+
+    python -m repro.explore sparsity --model resnet50 --run-dir runs/s50 \
+        --timeout 300 --retries 2
+    python -m repro.explore --resume runs/s50
+    python -m repro.explore --check-store runs/s50
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
+from pathlib import Path
 from typing import Dict, List, Optional
 
 from ..analysis import AnalysisError, preflight
@@ -45,9 +62,10 @@ from ..core import (TABLE_II_PATTERNS, MODEL_BUILDERS, hybrid, lm_workload,
                     usecase_arch)
 from ..core.presets import PRESET_ARCHS
 from ..core.schedule import POLICIES, SchedulePolicy
-from .cache import ResultCache
+from .cache import KeyJournal, ResultCache, ResultStore
+from .job import CACHE_SCHEMA
 from .pareto import DEFAULT_OBJECTIVES
-from .runner import SweepRunner
+from .runner import SweepFailure, SweepRunner
 from .sweeps import SweepResult, mapping_sweep, sparsity_sweep
 
 _ROW_COLS = ("pattern", "ratio", "mapping", "org", "rearrange", "schedule",
@@ -100,11 +118,7 @@ def _finish(result: SweepResult, args: argparse.Namespace) -> int:
     if args.top_k:
         _print_rows(result.top_k(args.metric, args.top_k),
                     f"top-{args.top_k} by {args.metric}")
-    s = result.stats
-    print(f"\nengine: {s.requested} jobs requested, {s.unique} unique, "
-          f"{s.cache_hits} cache hits ({s.memory_hits} mem / {s.disk_hits} "
-          f"disk), {s.evaluated} evaluated on {s.workers} worker(s) "
-          f"in {s.wall_s:.2f}s")
+    print(f"\nengine: {result.stats.stats_text()}")
     status = 0
     for path, write, what in ((args.csv, result.to_csv,
                                f"{len(result.rows)} rows"),
@@ -148,9 +162,67 @@ def _parse_orgs(ap: argparse.ArgumentParser, text: str) -> List[tuple]:
     return orgs
 
 
-def _runner(args: argparse.Namespace) -> SweepRunner:
-    cache = ResultCache(args.cache_dir) if args.cache_dir else None
-    return SweepRunner(workers=args.workers, cache=cache)
+def _runner(args: argparse.Namespace,
+            journal: Optional[KeyJournal] = None) -> SweepRunner:
+    # --run-dir supersedes --cache-dir: the run directory *is* the
+    # durable tier (store + journal + manifest) for this invocation
+    cache_path = args.run_dir or args.cache_dir
+    cache = ResultCache(cache_path) if cache_path else None
+    return SweepRunner(
+        workers=args.workers, cache=cache,
+        timeout_s=args.timeout, max_retries=args.retries,
+        backoff_s=args.backoff,
+        failure_mode="degrade" if args.degrade else "strict",
+        journal=journal)
+
+
+def _resume(run_dir: str) -> int:
+    """Replay the invocation recorded in ``<run-dir>/sweep.json``; the
+    store serves every completed point, so only missing ones evaluate."""
+    manifest = Path(run_dir) / "sweep.json"
+    if not manifest.exists():
+        print(f"error: {manifest} not found — was this run started with "
+              f"--run-dir?", file=sys.stderr)
+        return 2
+    try:
+        saved = json.loads(manifest.read_text())
+        argv = list(saved["argv"])
+    except (OSError, json.JSONDecodeError, KeyError, TypeError) as e:
+        print(f"error: could not read run manifest {manifest}: {e}",
+              file=sys.stderr)
+        return 2
+    if saved.get("cache_schema") != CACHE_SCHEMA:
+        print(f"warning: run recorded with cache_schema "
+              f"{saved.get('cache_schema')}, this build keys with "
+              f"{CACHE_SCHEMA} — every point will re-evaluate",
+              file=sys.stderr)
+    print(f"resuming: python -m repro.explore {' '.join(argv)}",
+          file=sys.stderr)
+    return main(argv)
+
+
+def _check_store(run_dir: str) -> int:
+    """Audit a run directory: decode every store entry (dropping any
+    that are corrupt) and cross-check the completed-keys journal."""
+    try:
+        store = ResultStore(run_dir)
+    except Exception as e:
+        print(f"error: could not open result store in {run_dir}: {e}",
+              file=sys.stderr)
+        return 1
+    check = store.self_check()
+    journal_keys = KeyJournal(Path(run_dir) / "journal.txt").keys()
+    missing = sorted(journal_keys - store.keys())
+    print(f"store [{check.backend}]: {check.entries} entries, "
+          f"{check.readable} readable, {check.corrupt} corrupt (dropped)")
+    print(f"journal: {len(journal_keys)} completed keys, "
+          f"{len(missing)} journaled but absent from the store")
+    if check.corrupt or missing:
+        print(f"hint: rerun with --resume {run_dir} to re-evaluate the "
+              f"missing points", file=sys.stderr)
+        return 1
+    print("store check: ok")
+    return 0
 
 
 def _traced_wl_fn(ap: argparse.ArgumentParser, spec: str, seq_len: int):
@@ -185,7 +257,8 @@ def main(argv: Optional[List[str]] = None) -> int:
         prog="python -m repro.explore",
         description=__doc__,
         formatter_class=argparse.RawDescriptionHelpFormatter)
-    ap.add_argument("sweep", choices=("sparsity", "mapping", "lm"))
+    ap.add_argument("sweep", nargs="?", default=None,
+                    choices=("sparsity", "mapping", "lm"))
     ap.add_argument("--model", choices=sorted(MODEL_BUILDERS),
                     default="resnet50", help="workload model (CNN sweeps)")
     ap.add_argument("--img", type=int, default=32,
@@ -214,6 +287,29 @@ def main(argv: Optional[List[str]] = None) -> int:
                     help="worker processes (default: one per CPU; 1 = serial)")
     ap.add_argument("--cache-dir", default=None,
                     help="on-disk result cache directory")
+    ap.add_argument("--run-dir", default=None, metavar="DIR",
+                    help="durable run directory: crash-safe result store, "
+                         "completed-keys journal, and a sweep manifest that "
+                         "--resume replays (supersedes --cache-dir)")
+    ap.add_argument("--resume", default=None, metavar="DIR",
+                    help="replay the sweep recorded in DIR/sweep.json, "
+                         "re-evaluating only points missing from its store")
+    ap.add_argument("--check-store", default=None, metavar="DIR",
+                    help="audit a run directory's store + journal and exit "
+                         "(0 = consistent)")
+    ap.add_argument("--timeout", type=float, default=None, metavar="S",
+                    help="per-job wall-clock budget; a dispatch exceeding "
+                         "it has its worker killed and is retried "
+                         "(parallel runs only)")
+    ap.add_argument("--retries", type=int, default=2, metavar="N",
+                    help="extra dispatches a failing job gets before it "
+                         "is quarantined (default 2)")
+    ap.add_argument("--backoff", type=float, default=0.05, metavar="S",
+                    help="base of the exponential retry backoff "
+                         "(default 0.05)")
+    ap.add_argument("--degrade", action="store_true",
+                    help="keep going past quarantined jobs — their rows "
+                         "are marked failed — instead of exiting non-zero")
     ap.add_argument("--csv", default=None)
     ap.add_argument("--json", default=None)
     ap.add_argument("--pareto", action="store_true",
@@ -243,7 +339,26 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--invocations", type=int, default=1, metavar="N",
                     help="repeated DAG executions per evaluation (resident "
                          "amortises its weight preload across them)")
+    argv = list(sys.argv[1:]) if argv is None else list(argv)
     args = ap.parse_args(argv)
+
+    if args.resume:
+        return _resume(args.resume)
+    if args.check_store:
+        return _check_store(args.check_store)
+    if args.sweep is None:
+        ap.error("a sweep name is required "
+                 "(or use --resume / --check-store)")
+
+    journal = None
+    if args.run_dir:
+        run_dir = Path(args.run_dir)
+        run_dir.mkdir(parents=True, exist_ok=True)
+        # the manifest lands before any evaluation so a SIGKILL at any
+        # later instant leaves a resumable run directory behind
+        (run_dir / "sweep.json").write_text(json.dumps(
+            {"argv": argv, "cache_schema": CACHE_SCHEMA}, indent=2) + "\n")
+        journal = KeyJournal(run_dir / "journal.txt")
 
     observer = None
     if args.obs or args.obs_dir:
@@ -278,7 +393,7 @@ def main(argv: Optional[List[str]] = None) -> int:
         if not policies:
             ap.error("--schedule must name at least one policy")
 
-    runner = _runner(args)
+    runner = _runner(args, journal)
     ratios = _parse_floats(ap, args.ratios)
     wl_override = (_traced_wl_fn(ap, args.workload, args.seq_len)
                    if args.workload else None)
@@ -363,9 +478,22 @@ def main(argv: Optional[List[str]] = None) -> int:
     except AnalysisError as e:
         ap.error(str(e))
 
-    result = run_policies(profile)
-    if args.diff_analytic:
-        _print_diff(result.rows, run_policies(None).rows)
+    try:
+        result = run_policies(profile)
+        if args.diff_analytic:
+            _print_diff(result.rows, run_policies(None).rows)
+    except SweepFailure as e:
+        print(f"error: {e}", file=sys.stderr)
+        for f in e.failures[:10]:
+            print(f"  failed {f.key[:16]} ({f.reason}, {f.attempts} "
+                  f"attempts): {f.error}", file=sys.stderr)
+        if len(e.failures) > 10:
+            print(f"  … {len(e.failures) - 10} more", file=sys.stderr)
+        if args.run_dir:
+            print(f"hint: surviving results are stored — "
+                  f"`python -m repro.explore --resume {args.run_dir}` "
+                  f"retries only the failures", file=sys.stderr)
+        return 3
     status = _finish(result, args)
     if observer is not None:
         ecsv = observer.artifact_path("energy_components.csv")

@@ -1,29 +1,56 @@
-"""Content-addressed result cache for exploration jobs.
+"""Crash-safe, content-addressed result storage for exploration jobs.
 
-Two tiers share one key space (:attr:`ExploreJob.key`):
+Three layers share one key space (:attr:`ExploreJob.key`):
 
-* an in-memory dict — hit for free within a runner's lifetime, shared
-  across every sweep that reuses the runner;
-* an optional on-disk directory — one pickle per key, so repeated CLI
-  invocations and benchmark re-runs skip already-costed grid points.
+* :class:`ResultCache` — the in-memory front every runner hits first,
+  optionally backed by a
+* :class:`ResultStore` — the durable tier: an SQLite database in WAL
+  mode (concurrent writers across processes and hosts, torn writes
+  impossible by construction) or, when ``sqlite3`` is unavailable, a
+  directory of atomically-renamed JSON files.  Entries are JSON-encoded
+  :class:`~repro.core.report.CostReport` payloads, schema-versioned via
+  ``STORE_SCHEMA``; a corrupt or truncated entry is treated as a miss,
+  deleted, and counted — it can never poison later runs.
+* :class:`KeyJournal` — an append-only completed-keys log a sweep run
+  directory keeps next to its store.  After a SIGKILL the journal says
+  exactly which points finished, so ``python -m repro.explore --resume
+  <run-dir>`` re-evaluates only the missing ones (a torn final line is
+  dropped by the hex-key validation).
 
-Writes are atomic (tmp file + ``os.replace``) so a crashed or parallel
-writer never leaves a torn entry, and a corrupt/unreadable entry is
-treated as a miss rather than an error.
+Fault injection (:mod:`repro.explore.faults`) hooks the store's write
+path — ``corrupt`` faults garble the payload *before* it lands on disk,
+which is how the chaos tests prove the read path's corruption
+tolerance.  The hook is a no-op ``None`` check when no plan is active.
 """
 from __future__ import annotations
 
 import dataclasses
+import json
 import os
-import pickle
+import string
 import tempfile
 import warnings
 from pathlib import Path
-from typing import Dict, Optional, Union
+from typing import Dict, IO, Optional, Set, Union
 
 from ..core.report import CostReport
+from . import faults
 
-__all__ = ["ResultCache", "CacheStats"]
+__all__ = ["ResultCache", "ResultStore", "CacheStats", "KeyJournal",
+           "StoreCheck", "StoreError", "STORE_SCHEMA"]
+
+# Bump when the durable tier's layout changes incompatibly (table shape,
+# payload encoding).  Distinct from job.CACHE_SCHEMA, which salts the
+# *keys*: a CACHE_SCHEMA bump silently retires old entries, while a
+# STORE_SCHEMA mismatch is a hard error — never guess at someone
+# else's bytes.
+STORE_SCHEMA = 1
+
+_HEXDIGITS = set(string.hexdigits)
+
+
+class StoreError(RuntimeError):
+    """The durable tier is unusable (schema mismatch, unreadable db)."""
 
 
 @dataclasses.dataclass
@@ -33,6 +60,7 @@ class CacheStats:
     memory_hits: int = 0
     disk_hits: int = 0
     misses: int = 0
+    corrupt_entries: int = 0     # torn/garbled entries dropped on read
 
     @property
     def hits(self) -> int:
@@ -45,39 +73,323 @@ class CacheStats:
     def as_dict(self) -> Dict[str, int]:
         return {"memory_hits": self.memory_hits, "disk_hits": self.disk_hits,
                 "misses": self.misses, "hits": self.hits,
-                "lookups": self.lookups}
+                "lookups": self.lookups,
+                "corrupt_entries": self.corrupt_entries}
+
+
+@dataclasses.dataclass
+class StoreCheck:
+    """Result of :meth:`ResultStore.self_check`."""
+
+    backend: str
+    entries: int                 # entries present before the check
+    readable: int                # entries that decoded to a CostReport
+    corrupt: int                 # entries dropped as undecodable
+
+    @property
+    def ok(self) -> bool:
+        return self.corrupt == 0
+
+
+def _encode(report: CostReport) -> bytes:
+    return json.dumps(report.to_dict(), separators=(",", ":")).encode()
+
+
+def _decode(payload: bytes) -> CostReport:
+    rep = CostReport.from_dict(json.loads(payload.decode()))
+    if not isinstance(rep, CostReport):
+        raise ValueError("payload is not a CostReport")
+    return rep
+
+
+class ResultStore:
+    """Durable ``job.key -> CostReport`` storage.
+
+    ``path`` may be a directory (the store lives at
+    ``<path>/results.sqlite``) or an explicit ``*.sqlite`` file.
+    ``backend`` forces ``"sqlite"`` or ``"json"``; the default picks
+    sqlite when the module is importable and falls back to the
+    atomic-rename JSON directory otherwise.
+
+    Crash-safety: sqlite runs in WAL mode (readers never block writers,
+    a killed writer's transaction simply never commits); the JSON
+    backend stages each entry in a temp file and ``os.replace``\\ s it
+    into place.  Either way a reader sees a complete old entry, a
+    complete new entry, or nothing — and anything undecodable is
+    deleted, counted in :attr:`corrupt_entries`, and reported as a miss.
+    """
+
+    def __init__(self, path: Union[str, Path], *,
+                 backend: Optional[str] = None):
+        path = Path(path)
+        if backend is None:
+            backend = "sqlite" if _sqlite3() is not None else "json"
+        if backend not in ("sqlite", "json"):
+            raise ValueError(f"unknown store backend {backend!r}")
+        if backend == "sqlite" and _sqlite3() is None:
+            raise StoreError("backend='sqlite' requested but the sqlite3 "
+                             "module is unavailable")
+        self.backend = backend
+        self.corrupt_entries = 0
+        if backend == "sqlite":
+            if path.suffix == ".sqlite":
+                self.dir, self.db_path = path.parent, path
+            else:
+                self.dir, self.db_path = path, path / "results.sqlite"
+            self.dir.mkdir(parents=True, exist_ok=True)
+            self._pid: Optional[int] = None
+            self._con = None
+            self._connect()                    # validate schema eagerly
+        else:
+            self.dir = path
+            self.dir.mkdir(parents=True, exist_ok=True)
+            self._check_json_meta()
+
+    # -- sqlite backend ------------------------------------------------------
+    def _connect(self):
+        """Per-process connection (forked workers never share one)."""
+        pid = os.getpid()
+        if self._con is not None and pid == self._pid:
+            return self._con
+        sqlite3 = _sqlite3()
+        con = sqlite3.connect(self.db_path, timeout=30.0)
+        con.execute("PRAGMA journal_mode=WAL")
+        con.execute("PRAGMA synchronous=NORMAL")
+        con.execute("PRAGMA busy_timeout=30000")
+        with con:
+            con.execute("CREATE TABLE IF NOT EXISTS meta "
+                        "(k TEXT PRIMARY KEY, v TEXT NOT NULL)")
+            con.execute("CREATE TABLE IF NOT EXISTS results "
+                        "(key TEXT PRIMARY KEY, payload BLOB NOT NULL)")
+            con.execute("INSERT OR IGNORE INTO meta VALUES "
+                        "('store_schema', ?)", (str(STORE_SCHEMA),))
+        row = con.execute("SELECT v FROM meta WHERE k='store_schema'"
+                          ).fetchone()
+        if row is None or int(row[0]) != STORE_SCHEMA:
+            found = "none" if row is None else row[0]
+            con.close()
+            raise StoreError(
+                f"result store {self.db_path} has store_schema {found}, "
+                f"this build expects {STORE_SCHEMA} — migrate or delete it")
+        self._con, self._pid = con, pid
+        return con
+
+    # -- json backend --------------------------------------------------------
+    def _check_json_meta(self) -> None:
+        meta = self.dir / "store_meta.json"
+        if meta.exists():
+            try:
+                recorded = json.loads(meta.read_text()).get("store_schema")
+            except (OSError, json.JSONDecodeError):
+                recorded = None
+            if recorded != STORE_SCHEMA:
+                raise StoreError(
+                    f"result store {self.dir} has store_schema "
+                    f"{recorded!r}, this build expects {STORE_SCHEMA} — "
+                    f"migrate or delete it")
+        else:
+            self._atomic_write(meta, json.dumps(
+                {"store_schema": STORE_SCHEMA}).encode())
+
+    def _entry_path(self, key: str) -> Path:
+        return self.dir / f"{key}.json"
+
+    def _atomic_write(self, path: Path, payload: bytes) -> None:
+        fd, tmp = tempfile.mkstemp(dir=self.dir, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "wb") as f:
+                f.write(payload)
+            os.replace(tmp, path)
+        except OSError:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+
+    # -- shared surface ------------------------------------------------------
+    def get(self, key: str) -> Optional[CostReport]:
+        payload: Optional[bytes] = None
+        if self.backend == "sqlite":
+            try:
+                row = self._connect().execute(
+                    "SELECT payload FROM results WHERE key=?",
+                    (key,)).fetchone()
+            except _sqlite3().Error as e:       # pragma: no cover - env
+                warnings.warn(f"result store read failed ({e})",
+                              RuntimeWarning, stacklevel=2)
+                return None
+            payload = bytes(row[0]) if row is not None else None
+        else:
+            p = self._entry_path(key)
+            if p.exists():
+                try:
+                    payload = p.read_bytes()
+                except OSError:
+                    payload = None
+        if payload is None:
+            return None
+        try:
+            return _decode(payload)
+        except Exception:
+            # torn / bit-rotted entry: drop it so it cannot poison every
+            # later run of the same sweep, count it, report a miss
+            self.corrupt_entries += 1
+            self.delete(key)
+            return None
+
+    def put(self, key: str, report: CostReport) -> None:
+        payload = faults.corrupt_payload(key, _encode(report))
+        if self.backend == "sqlite":
+            try:
+                con = self._connect()
+                with con:
+                    con.execute("INSERT OR REPLACE INTO results VALUES "
+                                "(?, ?)", (key, payload))
+            except _sqlite3().Error as e:       # pragma: no cover - env
+                warnings.warn(f"result store write failed ({e})",
+                              RuntimeWarning, stacklevel=2)
+        else:
+            try:
+                self._atomic_write(self._entry_path(key), payload)
+            except OSError as e:
+                warnings.warn(f"result store write failed ({e})",
+                              RuntimeWarning, stacklevel=2)
+
+    def delete(self, key: str) -> None:
+        if self.backend == "sqlite":
+            try:
+                con = self._connect()
+                with con:
+                    con.execute("DELETE FROM results WHERE key=?", (key,))
+            except _sqlite3().Error:            # pragma: no cover - env
+                pass
+        else:
+            try:
+                self._entry_path(key).unlink()
+            except OSError:
+                pass
+
+    def keys(self) -> Set[str]:
+        if self.backend == "sqlite":
+            rows = self._connect().execute("SELECT key FROM results")
+            return {r[0] for r in rows}
+        return {p.stem for p in sorted(self.dir.glob("*.json"))
+                if p.name != "store_meta.json"}
+
+    def __contains__(self, key: str) -> bool:
+        return key in self.keys()
+
+    def __len__(self) -> int:
+        if self.backend == "sqlite":
+            row = self._connect().execute(
+                "SELECT COUNT(*) FROM results").fetchone()
+            return int(row[0])
+        return len(self.keys())
+
+    def self_check(self) -> StoreCheck:
+        """Decode every entry; drop (and count) the undecodable ones."""
+        all_keys = sorted(self.keys())
+        before = self.corrupt_entries
+        readable = sum(1 for k in all_keys if self.get(k) is not None)
+        return StoreCheck(backend=self.backend, entries=len(all_keys),
+                          readable=readable,
+                          corrupt=self.corrupt_entries - before)
+
+    def close(self) -> None:
+        if self.backend == "sqlite" and self._con is not None:
+            try:
+                self._con.close()
+            except Exception:
+                pass
+            self._con = None
+
+
+def _sqlite3():
+    try:
+        import sqlite3
+    except ImportError:          # pragma: no cover - stdlib nearly always has it
+        return None
+    return sqlite3
+
+
+class KeyJournal:
+    """Append-only completed-keys log: one 64-hex job key per line.
+
+    Appends are line-buffered single writes, so a SIGKILL leaves at most
+    one torn *final* line — and :meth:`keys` drops anything that is not
+    a full hex key.  The journal is the resume contract: a key present
+    here was evaluated AND durably stored before the line was written.
+    """
+
+    def __init__(self, path: Union[str, Path]):
+        self.path = Path(path)
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        self._fh: Optional[IO[str]] = None
+        self._pid: Optional[int] = None
+
+    def record(self, key: str) -> None:
+        pid = os.getpid()
+        if self._fh is None or pid != self._pid:
+            self._fh = open(self.path, "a", buffering=1)
+            self._pid = pid
+        self._fh.write(key + "\n")
+
+    def keys(self) -> Set[str]:
+        if not self.path.exists():
+            return set()
+        out: Set[str] = set()
+        with open(self.path) as f:
+            for line in f:
+                key = line.strip()
+                if len(key) == 64 and set(key) <= _HEXDIGITS:
+                    out.add(key)
+        return out
+
+    def close(self) -> None:
+        if self._fh is not None:
+            try:
+                self._fh.close()
+            except OSError:
+                pass
+            self._fh = None
 
 
 class ResultCache:
-    """Memoises ``job.key -> CostReport``."""
+    """Memoises ``job.key -> CostReport``: an in-memory dict fronting an
+    optional durable :class:`ResultStore`.
 
-    def __init__(self, path: Optional[Union[str, Path]] = None):
+    ``path`` builds a store at that location (the pre-PR-9 pickle
+    directory is gone — old ``*.pkl`` entries are simply never read);
+    pass ``store`` to share one durable tier across caches.  Corrupt
+    durable entries surface as misses and are counted in
+    ``stats.corrupt_entries``.
+    """
+
+    def __init__(self, path: Optional[Union[str, Path]] = None, *,
+                 store: Optional[ResultStore] = None):
         self._mem: Dict[str, CostReport] = {}
-        self._dir: Optional[Path] = None
         self.stats = CacheStats()
-        if path is not None:
-            self._dir = Path(path)
-            self._dir.mkdir(parents=True, exist_ok=True)
+        if store is not None:
+            self.store: Optional[ResultStore] = store
+        elif path is not None:
+            self.store = ResultStore(path)
+        else:
+            self.store = None
 
     def __len__(self) -> int:
         return len(self._mem)
-
-    def _disk_path(self, key: str) -> Optional[Path]:
-        return self._dir / f"{key}.pkl" if self._dir else None
 
     def get(self, key: str) -> Optional[CostReport]:
         rep = self._mem.get(key)
         if rep is not None:
             self.stats.memory_hits += 1
             return rep
-        p = self._disk_path(key)
-        if p is not None and p.exists():
-            try:
-                with open(p, "rb") as f:
-                    rep = pickle.load(f)
-            except Exception:
-                rep = None            # torn/stale entry: fall through to miss
-            if isinstance(rep, CostReport):
+        if self.store is not None:
+            before = self.store.corrupt_entries
+            rep = self.store.get(key)
+            self.stats.corrupt_entries += self.store.corrupt_entries - before
+            if rep is not None:
                 self._mem[key] = rep
                 self.stats.disk_hits += 1
                 return rep
@@ -86,24 +398,9 @@ class ResultCache:
 
     def put(self, key: str, report: CostReport) -> None:
         self._mem[key] = report
-        p = self._disk_path(key)
-        if p is None:
-            return
-        tmp = None
-        try:
-            fd, tmp = tempfile.mkstemp(dir=self._dir, suffix=".tmp")
-            with os.fdopen(fd, "wb") as f:
-                pickle.dump(report, f, protocol=pickle.HIGHEST_PROTOCOL)
-            os.replace(tmp, p)
-        except OSError as e:
-            # mirror the read path's soft-miss contract: a full or
-            # read-only cache volume must not abort a finished sweep —
-            # degrade to memory-only and keep going
-            if tmp is not None:
-                try:
-                    os.unlink(tmp)
-                except OSError:
-                    pass
-            warnings.warn(f"result cache disk tier disabled ({e})",
-                          RuntimeWarning, stacklevel=2)
-            self._dir = None
+        if self.store is not None:
+            self.store.put(key, report)
+
+    def close(self) -> None:
+        if self.store is not None:
+            self.store.close()

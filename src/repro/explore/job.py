@@ -12,6 +12,14 @@ flattened to ``(class-name, sorted fields)``, dicts are sorted, numpy
 arrays are serialised with their dtype and shape.  ``CACHE_SCHEMA`` salts
 the digest so stale on-disk results are invalidated whenever the cost
 model changes shape.
+
+Execution-policy knobs stay out of jobs by contract: retry budgets,
+timeouts, backoff, fault-injection plans (:mod:`repro.explore.faults`)
+change how a sweep *executes*, never what a job *computes*, so they are
+runner-level state and must not become job fields or ``simulate()``
+parameters — cache keys may not vary with them.  The ``cache-key``
+analysis pass machine-checks this (CIM206: no fault-named fields here,
+no ``faults`` import in this module).
 """
 from __future__ import annotations
 

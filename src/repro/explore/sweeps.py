@@ -134,6 +134,16 @@ def run_grid(points: Sequence[GridPoint], *,
     for i, p in enumerate(points):
         rep, dense = reports[2 * i], reports[2 * i + 1]
         meta = dict(p.meta)
+        if rep is None or dense is None:
+            # degrade-mode runner quarantined this point (or its
+            # baseline): keep the row identifiable, mark it failed
+            row = {"arch": p.job.arch.name, "workload": p.job.workload.name,
+                   "pattern": meta.pop("pattern", ""),
+                   "ratio": meta.pop("ratio", None),
+                   "mapping": p.job.mapping.strategy, "failed": True}
+            row.update(meta)
+            rows.append(row)
+            continue
         row = _row(p.job.arch, p.job.workload, meta.pop("pattern", ""),
                    meta.pop("ratio", None), p.job.mapping.strategy,
                    rep, compare(rep, dense))
@@ -146,6 +156,8 @@ def run_grid(points: Sequence[GridPoint], *,
         from ..obs.energy import append_energy_csv, component_rows
         erows: List[Dict] = []
         for i, p in enumerate(points):
+            if reports[2 * i] is None:
+                continue
             erows.extend(component_rows(reports[2 * i], meta=dict(p.meta)))
         append_energy_csv(
             erows, observer.artifact_path("energy_components.csv"))

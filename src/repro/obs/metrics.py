@@ -98,6 +98,8 @@ class ServeMetrics:
     def __init__(self):
         self.requests_submitted = 0
         self.requests_completed = 0
+        self.requests_rejected = 0     # refused admission (queue full)
+        self.requests_expired = 0      # deadline passed (queued or decoding)
         self.tokens_generated = 0
         self.steps = 0
         self.queue_depth = 0           # gauge: waiting, not yet in a slot
@@ -113,6 +115,17 @@ class ServeMetrics:
 
     def on_scheduled(self) -> None:
         self.queue_depth -= 1
+
+    def on_reject(self) -> None:
+        # a rejected request never entered the queue: no submit/depth
+        self.requests_rejected += 1
+
+    def on_expire(self, queued: bool = True) -> None:
+        # ``queued``: expired while waiting (it held a queue_depth unit);
+        # False = cut off mid-decode (its slot is released by the engine)
+        self.requests_expired += 1
+        if queued:
+            self.queue_depth -= 1
 
     def on_first_token(self, ttft_s: float) -> None:
         self.ttft.observe(ttft_s)
@@ -142,6 +155,10 @@ class ServeMetrics:
             "requests": {"submitted": self.requests_submitted,
                          "completed": self.requests_completed,
                          "queue_depth": self.queue_depth},
+            # kept out of "requests" so long-standing consumers of that
+            # sub-dict (and its exact shape) are unaffected
+            "failures": {"rejected": self.requests_rejected,
+                         "expired": self.requests_expired},
             "steps": self.steps,
             "active_slots": self.active_slots,
             "tokens_generated": self.tokens_generated,
@@ -157,10 +174,12 @@ class ServeMetrics:
     def render_text(self) -> str:
         s = self.snapshot()
         t, tl = s["ttft_s"], s["token_latency_s"]
+        f = s["failures"]
         return "\n".join([
             f"serve.requests submitted={s['requests']['submitted']} "
             f"completed={s['requests']['completed']} "
-            f"queue_depth={s['requests']['queue_depth']}",
+            f"queue_depth={s['requests']['queue_depth']} "
+            f"rejected={f['rejected']} expired={f['expired']}",
             f"serve.steps {s['steps']} active_slots={s['active_slots']}",
             f"serve.tokens {s['tokens_generated']} "
             f"({s['tokens_per_s']:.1f} tok/s over {s['busy_s']:.3f}s busy)",

@@ -31,9 +31,17 @@ class Request:
     prompt: np.ndarray              # (S,) int32
     max_new_tokens: int = 16
     eos_id: int = -1                # -1 = never
+    # wall-second budget from submit(); a request still queued past it
+    # is dropped, one mid-decode is cut off with partial output.
+    # None = no deadline.
+    deadline_s: Optional[float] = None
     # filled by the engine:
     output: Optional[List[int]] = None
     done: bool = False
+    # why the engine refused/abandoned this request ("queue_full",
+    # "deadline"); None while healthy.  ``done`` stays False for a
+    # request that never produced output.
+    reject_reason: Optional[str] = None
     # telemetry (observational only): monotonic submit time, for TTFT
     submit_t: Optional[float] = None
 
@@ -41,9 +49,14 @@ class Request:
 class ServeEngine:
     def __init__(self, cfg: ArchConfig, params, *, slots: int = 4,
                  max_len: int = 256, greedy: bool = True,
+                 max_queue: Optional[int] = None,
                  dtype=jnp.float32):
         self.cfg, self.params = cfg, params
         self.slots, self.max_len = slots, max_len
+        # admission bound: submit() rejects (reject_reason="queue_full")
+        # once this many requests wait, instead of growing without limit.
+        # None = unbounded (the historical behaviour).
+        self.max_queue = max_queue
         # warn-only pre-flight: surface a structurally broken config
         # (bad dims, incoherent DAG) at engine construction instead of
         # as a shape error mid-request
@@ -67,13 +80,39 @@ class ServeEngine:
         self.last_stats: Dict[str, Any] = {}
 
     # -- request management --------------------------------------------------
-    def submit(self, req: Request) -> None:
+    def submit(self, req: Request) -> bool:
+        """Admit ``req`` (True) or reject it with backpressure (False).
+
+        Rejection is immediate and structured — ``req.reject_reason`` is
+        set to ``"queue_full"`` and the request never enters the queue —
+        so a load generator can shed or retry instead of the queue
+        growing without bound."""
+        if self.max_queue is not None and len(self.queue) >= self.max_queue:
+            req.reject_reason = "queue_full"
+            self.metrics.on_reject()
+            return False
         req.output = []
         req.submit_t = time.monotonic()
         self.queue.append(req)
         self.metrics.on_submit()
+        return True
+
+    def _expired(self, req: Request, now: float) -> bool:
+        return (req.deadline_s is not None and req.submit_t is not None
+                and now - req.submit_t > req.deadline_s)
 
     def _fill_slots(self) -> None:
+        now = time.monotonic()
+        # drop queued requests whose deadline already passed — decoding
+        # them would only delay every request behind them
+        kept: List[Request] = []
+        for req in self.queue:
+            if self._expired(req, now):
+                req.reject_reason = "deadline"
+                self.metrics.on_expire(queued=True)
+            else:
+                kept.append(req)
+        self.queue = kept
         for s in range(self.slots):
             if self.slot_req[s] is None and self.queue:
                 req = self.queue.pop(0)
@@ -126,6 +165,7 @@ class ServeEngine:
         logits, self.cache = self._decode(self.params, tokens, self.cache)
         next_tokens = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
         completed = 0
+        now = time.monotonic()
         for s in active:
             req = self.slot_req[s]
             tok = int(next_tokens[s])
@@ -138,6 +178,12 @@ class ServeEngine:
                 req.done = True
                 self.slot_req[s] = None
                 completed += 1
+            elif self._expired(req, now):
+                # deadline passed mid-decode: keep the partial output,
+                # free the slot for requests that can still make it
+                req.reject_reason = "deadline"
+                self.slot_req[s] = None
+                self.metrics.on_expire(queued=False)
         step_s = time.monotonic() - t0
         m = self.metrics
         m.on_step(len(active), step_s)

@@ -251,6 +251,38 @@ def test_cachekey_catches_obs_import_in_job_module(tmp_path):
     assert any("obs" in d.message for d in diags)
 
 
+def test_cachekey_catches_fault_named_job_field(tmp_path):
+    """CIM206: retry/timeout/fault knobs are runner-level — a
+    fault-named ExploreJob field is a cache-key contract breach."""
+    root = _mutated_tree(tmp_path)
+    _sub(root, "explore/job.py",
+         "kind: str                                   # 'simulate' | 'dense'",
+         "kind: str                                   # 'simulate' | 'dense'"
+         "\n    retry_budget: int = 2")
+    diags = _run("cache-key", root)
+    assert "CIM206" in _codes(diags)
+    assert any("retry_budget" in d.message for d in diags)
+
+
+def test_cachekey_catches_fault_named_simulate_param(tmp_path):
+    root = _mutated_tree(tmp_path)
+    _sub(root, "core/costmodel.py",
+         "def simulate(",
+         "def simulate(*, timeout_s=None):\n    pass\n"
+         "def _old_simulate(")
+    diags = _run("cache-key", root)
+    assert "CIM206" in _codes(diags)
+    assert any("timeout_s" in d.message for d in diags)
+
+
+def test_cachekey_catches_faults_import_in_job_module(tmp_path):
+    root = _mutated_tree(tmp_path)
+    _append(root, "explore/job.py", "\nfrom . import faults  # noqa\n")
+    diags = _run("cache-key", root)
+    assert _codes(diags) == ["CIM206"]
+    assert any("faults" in d.message for d in diags)
+
+
 # ---------------------------------------------------------------------------
 # pass 3: model-plane validation (live-object goldens)
 # ---------------------------------------------------------------------------

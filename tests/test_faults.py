@@ -1,0 +1,418 @@
+"""Chaos-recovery tests: deterministic fault injection proving the
+fault-tolerance layer (jax-free).
+
+The contract under test: a sweep that loses workers, hangs, hits
+transient exceptions, or reads corrupted store entries must finish with
+every *surviving* row bit-identical to a fault-free run — and a
+SIGKILLed sweep must resume re-evaluating only the missing points.
+"""
+import os
+import re
+import signal
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+import pytest
+
+from repro.core import TABLE_II_PATTERNS, default_mapping, resnet18, usecase_arch
+from repro.explore import (ExploreJob, FaultError, FaultPlan, KeyJournal,
+                           ResultCache, ResultStore, RunStats, StoreError,
+                           SweepFailure, SweepRunner, faults,
+                           parse_fault_spec, sparsity_sweep)
+from repro.explore.__main__ import main as explore_main
+
+RATIOS = (0.7, 0.8)
+
+
+@pytest.fixture(scope="module")
+def arch4():
+    return usecase_arch(4)
+
+
+@pytest.fixture(autouse=True)
+def _no_leaked_plan():
+    yield
+    faults.uninstall()
+
+
+def _pattern_factory(r):
+    return TABLE_II_PATTERNS(r, c_in=16)
+
+
+def _sweep(runner, arch):
+    return sparsity_sweep(arch, lambda: resnet18(32), {}, ratios=RATIOS,
+                          mapping=default_mapping(arch),
+                          pattern_factory=_pattern_factory, runner=runner)
+
+
+@pytest.fixture(scope="module")
+def baseline(arch4):
+    """Fault-free parallel run: (rows, all job keys, the dense key)."""
+    runner = SweepRunner(workers=2)
+    res = _sweep(runner, arch4)
+    runner.close()
+    dense = ExploreJob.dense(arch4, resnet18(32),
+                             default_mapping(arch4)).key
+    return res.rows, sorted(runner._seen_keys), dense
+
+
+def _seed_selecting(kind, keys, rate, want=1):
+    """A seed whose plan selects >= ``want`` of ``keys`` — keeps the
+    rate-based tests independent of incidental key churn."""
+    for seed in range(200):
+        plan = FaultPlan(**{"seed": seed, kind: rate})
+        if sum(plan.selected(kind, k) for k in keys) >= want:
+            return seed
+    raise AssertionError(f"no seed selects {want} keys for {kind}")
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan / spec grammar
+# ---------------------------------------------------------------------------
+
+def test_fault_spec_roundtrip():
+    plan = FaultPlan(seed=7, crash=0.25, exc=0.5, times=float("inf"),
+                     hang_s=12.0, match="ab12")
+    assert parse_fault_spec(plan.spec()) == plan
+    assert parse_fault_spec("seed=3,hang=1.0") == FaultPlan(seed=3, hang=1.0)
+
+
+@pytest.mark.parametrize("bad", ["frobnicate=1", "crash", "crash=",
+                                 "crash=2.0", "times=-1", "seed=x"])
+def test_fault_spec_rejects_malformed(bad):
+    with pytest.raises(ValueError):
+        parse_fault_spec(bad)
+
+
+def test_fault_selection_deterministic_and_matched():
+    plan = FaultPlan(seed=9, crash=0.5, match="ab")
+    keys = [f"{p}{i:02d}" + "0" * 60 for p in ("ab", "cd") for i in range(20)]
+    first = [plan.selected("crash", k) for k in keys]
+    assert first == [plan.selected("crash", k) for k in keys]  # pure
+    assert not any(sel for k, sel in zip(keys, first) if k.startswith("cd"))
+    assert any(sel for k, sel in zip(keys, first) if k.startswith("ab"))
+    # times bounds the attempts a selected fault fires on
+    victim = next(k for k, sel in zip(keys, first) if sel)
+    assert plan.should("crash", victim, attempt=0)
+    assert not plan.should("crash", victim, attempt=1)
+    forever = FaultPlan(seed=9, crash=0.5, match="ab", times=float("inf"))
+    assert forever.should("crash", victim, attempt=10 ** 6)
+
+
+def test_crash_fault_degrades_to_exception_in_parent():
+    """Outside a pool worker an injected crash must not kill the
+    process — it raises FaultError so sequential paths stay testable."""
+    faults.install(FaultPlan(crash=1.0), export_env=False)
+    assert not faults.in_worker()
+    with pytest.raises(FaultError):
+        faults.maybe_fail("deadbeef" * 8)
+
+
+def test_env_spec_install_uninstall(monkeypatch):
+    faults.install("seed=5,exc=0.5")
+    assert os.environ[faults._ENV_VAR] == "seed=5,exc=0.5"
+    assert faults.active_plan() == FaultPlan(seed=5, exc=0.5)
+    faults.uninstall()
+    assert faults._ENV_VAR not in os.environ
+    assert faults.active_plan() is None
+
+
+def test_corrupt_payload_deterministic():
+    plan = FaultPlan(seed=2, corrupt=1.0)
+    faults.install(plan, export_env=False)
+    key, payload = "ab" * 32, b"x" * 300
+    garbled = faults.corrupt_payload(key, payload)
+    assert garbled != payload
+    assert garbled == faults.corrupt_payload(key, payload)  # reproducible
+    faults.uninstall()
+    assert faults.corrupt_payload(key, payload) == payload  # disabled: no-op
+
+
+# ---------------------------------------------------------------------------
+# Store corruption tolerance
+# ---------------------------------------------------------------------------
+
+def _garble(store, key):
+    if store.backend == "json":
+        store._entry_path(key).write_bytes(b"\x00torn")
+    else:
+        con = store._connect()
+        with con:
+            con.execute("INSERT OR REPLACE INTO results VALUES (?, ?)",
+                        (key, b"\x00torn"))
+
+
+@pytest.mark.parametrize("backend", ["sqlite", "json"])
+def test_corrupt_entry_is_miss_removed_and_counted(tmp_path, backend, arch4):
+    store = ResultStore(tmp_path / "s", backend=backend)
+    runner = SweepRunner(workers=1, cache=ResultCache(store=store))
+    res = _sweep(runner, arch4)
+    victim = sorted(runner._seen_keys)[0]
+    _garble(store, victim)
+
+    fresh = ResultStore(tmp_path / "s", backend=backend)
+    assert fresh.get(victim) is None            # miss, not an exception
+    assert fresh.corrupt_entries == 1
+    assert victim not in fresh.keys()           # bad entry removed
+    _garble(fresh, victim)                      # re-damage for the sweep
+
+    # a sweep over the damaged store re-evaluates just the victim and
+    # produces bit-identical rows
+    cache2 = ResultCache(store=ResultStore(tmp_path / "s", backend=backend))
+    runner2 = SweepRunner(workers=1, cache=cache2)
+    res2 = _sweep(runner2, arch4)
+    assert res2.rows == res.rows
+    assert res2.stats.evaluated == 1
+    assert res2.stats.corrupt_entries == 1
+    assert cache2.stats.corrupt_entries == 1
+
+
+@pytest.mark.parametrize("backend", ["sqlite", "json"])
+def test_store_schema_mismatch_is_hard_error(tmp_path, backend):
+    store = ResultStore(tmp_path / "s", backend=backend)
+    if backend == "json":
+        (tmp_path / "s" / "store_meta.json").write_text(
+            '{"store_schema": 999}')
+    else:
+        con = store._connect()
+        with con:
+            con.execute("UPDATE meta SET v='999' WHERE k='store_schema'")
+    store.close()
+    with pytest.raises(StoreError):
+        ResultStore(tmp_path / "s", backend=backend)
+
+
+def test_corrupt_fault_injection_end_to_end(tmp_path, arch4, baseline):
+    """A ``corrupt`` fault garbles entries on *write*; the read path
+    must absorb them: rows stay correct, damage is counted."""
+    rows0, keys, dense = baseline
+    victim = next(k for k in keys if k != dense)
+    faults.install(FaultPlan(seed=1, corrupt=1.0, match=victim[:16]),
+                   export_env=False)
+    cache = ResultCache(tmp_path / "run")
+    res = _sweep(SweepRunner(workers=1, cache=cache), arch4)
+    faults.uninstall()
+    assert res.rows == rows0                    # in-memory results unharmed
+
+    cache2 = ResultCache(tmp_path / "run")
+    runner2 = SweepRunner(workers=1, cache=cache2)
+    res2 = _sweep(runner2, arch4)
+    assert res2.rows == rows0
+    assert res2.stats.corrupt_entries == 1      # garbled entry dropped
+    assert res2.stats.evaluated == 1            # only the victim re-ran
+
+
+def test_journal_drops_torn_tail(tmp_path):
+    j = KeyJournal(tmp_path / "journal.txt")
+    a, b = "ab" * 32, "cd" * 32
+    j.record(a)
+    j.record(b)
+    j.close()
+    with open(tmp_path / "journal.txt", "a") as f:
+        f.write("ef" * 10)                      # torn final line, no newline
+    assert KeyJournal(tmp_path / "journal.txt").keys() == {a, b}
+
+
+# ---------------------------------------------------------------------------
+# Chaos sweeps: surviving rows bit-identical to the fault-free run
+# ---------------------------------------------------------------------------
+
+def test_transient_exceptions_recovered_bitwise(arch4, baseline):
+    rows0, keys, _ = baseline
+    seed = _seed_selecting("exc", keys, 0.3, want=2)
+    faults.install(FaultPlan(seed=seed, exc=0.3, times=1))
+    runner = SweepRunner(workers=2, backoff_s=0.01)
+    res = _sweep(runner, arch4)
+    runner.close()
+    assert res.rows == rows0
+    assert res.stats.retried >= 2 and res.stats.failed == 0
+
+
+def test_worker_crash_recovered_bitwise(arch4, baseline):
+    """Mid-flight worker kills: the pool self-heals, suspects re-run
+    solo, and every row matches the fault-free run bit for bit."""
+    rows0, keys, _ = baseline
+    seed = _seed_selecting("crash", keys, 0.3, want=2)
+    faults.install(FaultPlan(seed=seed, crash=0.3, times=1))
+    runner = SweepRunner(workers=2, backoff_s=0.01)
+    res = _sweep(runner, arch4)
+    runner.close()
+    assert res.rows == rows0
+    assert res.stats.retried >= 2 and res.stats.failed == 0
+
+
+def test_hung_worker_recovered_by_timeout(arch4, baseline):
+    rows0, keys, dense = baseline
+    victim = next(k for k in keys if k != dense)
+    faults.install(FaultPlan(seed=3, hang=1.0, hang_s=60.0, times=1,
+                             match=victim[:16]))
+    runner = SweepRunner(workers=2, timeout_s=2.0, backoff_s=0.01)
+    res = _sweep(runner, arch4)
+    runner.close()
+    assert res.rows == rows0
+    assert res.stats.timed_out >= 1 and res.stats.failed == 0
+
+
+def test_poison_job_quarantined_strict_and_degrade(arch4, baseline):
+    rows0, keys, dense = baseline
+    victim = next(k for k in keys if k != dense)
+    plan = FaultPlan(seed=3, crash=1.0, times=float("inf"),
+                     match=victim[:16])
+
+    faults.install(plan)
+    runner = SweepRunner(workers=2, backoff_s=0.01)
+    with pytest.raises(SweepFailure) as ei:
+        _sweep(runner, arch4)
+    runner.close()
+    assert [f.key for f in ei.value.failures] == [victim]
+    assert ei.value.failures[0].reason == "crash"
+    # partial results delivered alongside the failure: exactly the
+    # poison job's slot is None, everything else survived
+    assert sum(r is None for r in ei.value.results) == 1
+
+    faults.install(plan)
+    runner = SweepRunner(workers=2, backoff_s=0.01, failure_mode="degrade")
+    res = _sweep(runner, arch4)
+    runner.close()
+    failed = [r for r in res.rows if r.get("failed")]
+    ok = [r for r in res.rows if not r.get("failed")]
+    assert len(failed) == 1 and failed[0]["workload"] == "resnet18-32"
+    assert all(r in rows0 for r in ok)          # survivors bit-identical
+    assert res.stats.failed == 1
+
+
+# ---------------------------------------------------------------------------
+# SIGKILL + resume: only the missing points re-evaluate
+# ---------------------------------------------------------------------------
+
+_ENGINE_RE = re.compile(r"engine: .*?(\d+) evaluated")
+
+
+def _evaluated_from(output: str) -> int:
+    m = _ENGINE_RE.search(output)
+    assert m, f"no engine line in output:\n{output}"
+    return int(m.group(1))
+
+
+def _cli(run_dir, extra=()):
+    return ["sparsity", "--model", "resnet18", "--img", "32",
+            "--ratios", "0.7,0.8", "--workers", "2",
+            "--run-dir", str(run_dir), *extra]
+
+
+def test_sigkill_then_resume_evaluates_only_missing(tmp_path, capsys):
+    run_dir = tmp_path / "run"
+    env = dict(os.environ,
+               PYTHONPATH=str(Path(__file__).resolve().parent.parent / "src"),
+               # every job sleeps 0.4s on every attempt: pure latency,
+               # no retries — guarantees we can SIGKILL mid-sweep
+               REPRO_FAULTS="seed=1,hang=1.0,hang_s=0.4,times=1000000")
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.explore", *_cli(run_dir)],
+        env=env, stdout=subprocess.DEVNULL, stderr=subprocess.DEVNULL,
+        start_new_session=True)
+    journal = KeyJournal(run_dir / "journal.txt")
+    deadline = time.monotonic() + 120
+    try:
+        while len(journal.keys()) < 3:
+            assert proc.poll() is None, "sweep finished before the kill"
+            assert time.monotonic() < deadline, "no progress before kill"
+            time.sleep(0.05)
+    finally:
+        if proc.poll() is None:
+            os.killpg(proc.pid, signal.SIGKILL)
+        proc.wait()
+
+    # the store survived the SIGKILL intact: every journaled key is
+    # present and readable (WAL / atomic rename — no torn entries)
+    store = ResultStore(run_dir)
+    journaled = journal.keys()
+    assert len(journaled) >= 3
+    check = store.self_check()
+    assert check.ok and journaled <= store.keys()
+    store.close()
+
+    # resume replays the recorded invocation; only missing points run
+    assert explore_main(["--resume", str(run_dir)]) == 0
+    out = capsys.readouterr().out
+    total_unique = len(KeyJournal(run_dir / "journal.txt").keys())
+    assert _evaluated_from(out) == total_unique - len(journaled)
+    assert total_unique > len(journaled)        # the kill left work behind
+
+    # a second resume is a pure cache replay
+    assert explore_main(["--resume", str(run_dir)]) == 0
+    assert _evaluated_from(capsys.readouterr().out) == 0
+
+    # and the audited run directory is consistent
+    assert explore_main(["--check-store", str(run_dir)]) == 0
+
+
+def test_cli_run_dir_resume_and_check_store(tmp_path, capsys):
+    run_dir = tmp_path / "run"
+    assert explore_main(_cli(run_dir, ("--workers", "1"))) == 0
+    first = _evaluated_from(capsys.readouterr().out)
+    assert first > 0
+    assert explore_main(["--resume", str(run_dir)]) == 0
+    assert _evaluated_from(capsys.readouterr().out) == 0
+    assert explore_main(["--check-store", str(run_dir)]) == 0
+    assert "store check: ok" in capsys.readouterr().out
+
+
+def test_cli_strict_failure_exit_code_and_resume_hint(tmp_path, capsys):
+    run_dir = tmp_path / "run"
+    # a sweep-wide transient that outlasts the retry budget on one key:
+    # first learn a real key, then poison it permanently
+    assert explore_main(_cli(run_dir, ("--workers", "1"))) == 0
+    capsys.readouterr()
+    keys = sorted(KeyJournal(run_dir / "journal.txt").keys())
+    faults.install(FaultPlan(crash=1.0, times=float("inf"),
+                             match=keys[0][:16]))
+    run2 = tmp_path / "run2"
+    rc = explore_main(_cli(run2, ("--workers", "1", "--backoff", "0.01")))
+    err = capsys.readouterr().err
+    assert rc == 3
+    assert "failed after retries" in err and "--resume" in err
+    # degrade mode keeps going and exits 0, marking the row failed
+    faults.install(FaultPlan(crash=1.0, times=float("inf"),
+                             match=keys[0][:16]))
+    run3 = tmp_path / "run3"
+    rc = explore_main(_cli(run3, ("--workers", "1", "--backoff", "0.01",
+                                  "--degrade")))
+    assert rc == 0
+
+
+def test_check_store_flags_corruption(tmp_path, capsys):
+    run_dir = tmp_path / "run"
+    assert explore_main(_cli(run_dir, ("--workers", "1"))) == 0
+    capsys.readouterr()
+    store = ResultStore(run_dir)
+    victim = sorted(store.keys())[0]
+    _garble(store, victim)
+    store.close()
+    assert explore_main(["--check-store", str(run_dir)]) == 1
+    out = capsys.readouterr()
+    assert "1 corrupt" in out.out
+    # the check dropped the bad entry; resume heals the run directory
+    assert explore_main(["--resume", str(run_dir)]) == 0
+    assert _evaluated_from(capsys.readouterr().out) == 1
+    assert explore_main(["--check-store", str(run_dir)]) == 0
+
+
+# ---------------------------------------------------------------------------
+# RunStats fault counters
+# ---------------------------------------------------------------------------
+
+def test_runstats_fault_counters_merge_and_text():
+    a = RunStats(requested=4, unique=3, evaluated=3, failed=1, retried=2,
+                 timed_out=1, corrupt_entries=1)
+    b = RunStats(requested=2, unique=2, evaluated=2)
+    m = a.merge(b)
+    assert (m.failed, m.retried, m.timed_out, m.corrupt_entries) \
+        == (1, 2, 1, 1)
+    assert m.as_dict()["failed"] == 1
+    assert "faults: 1 failed, 2 retried, 1 timed out" in a.stats_text()
+    assert "faults:" not in b.stats_text()      # quiet when clean
+    # failed jobs are not cache hits
+    assert a.cache_hits == 4 - 3 - 1

@@ -128,3 +128,78 @@ def test_engine_metrics_do_not_change_outputs(params):
     snap = engine.stats_snapshot()
     assert snap["ttft_s"]["p50"] > 0
     assert snap["tokens_per_s"] > 0
+
+
+def test_queue_full_backpressure(params):
+    """Bounded admission: submits past max_queue are rejected with a
+    structured reason and never perturb the admitted requests."""
+    rng = np.random.default_rng(7)
+    engine = ServeEngine(CFG, params, slots=1, max_len=48, max_queue=2)
+    reqs = [Request(prompt=rng.integers(0, CFG.vocab_size, size=4)
+                    .astype(np.int32), max_new_tokens=3) for _ in range(3)]
+    assert engine.submit(reqs[0]) is True
+    assert engine.submit(reqs[1]) is True
+    assert engine.submit(reqs[2]) is False
+    assert reqs[2].reject_reason == "queue_full"
+    assert reqs[2].output is None and not reqs[2].done
+    assert engine.metrics.requests_rejected == 1
+    assert engine.metrics.queue_depth == 2   # rejected one never entered
+
+    engine.run()
+    for r in reqs[:2]:
+        assert r.done
+        assert r.output == _greedy_reference(params, r.prompt, 3)
+    snap = engine.stats_snapshot()
+    assert snap["requests"]["submitted"] == 2
+    assert snap["requests"]["completed"] == 2
+    assert snap["failures"] == {"rejected": 1, "expired": 0}
+    assert "rejected=1 expired=0" in engine.stats_text()
+
+
+def test_deadline_drops_queued_request(params):
+    """A request whose deadline lapses while queued is dropped before
+    prefill; requests ahead of it are unaffected."""
+    rng = np.random.default_rng(8)
+    engine = ServeEngine(CFG, params, slots=1, max_len=48)
+    ok = Request(prompt=rng.integers(0, CFG.vocab_size, size=4)
+                 .astype(np.int32), max_new_tokens=3)
+    late = Request(prompt=rng.integers(0, CFG.vocab_size, size=4)
+                   .astype(np.int32), max_new_tokens=3, deadline_s=0.0)
+    assert engine.submit(ok) and engine.submit(late)
+    engine.run()
+
+    assert ok.done
+    assert ok.output == _greedy_reference(params, ok.prompt, 3)
+    assert not late.done
+    assert late.reject_reason == "deadline"
+    assert late.output == []                 # admitted but never prefilled
+    assert engine.metrics.requests_expired == 1
+    snap = engine.stats_snapshot()
+    assert snap["requests"]["queue_depth"] == 0
+    assert snap["failures"] == {"rejected": 0, "expired": 1}
+
+
+def test_deadline_cuts_off_mid_decode(params):
+    """A deadline crossed mid-decode keeps the partial output, frees the
+    slot, and counts as expired — the engine keeps draining."""
+    rng = np.random.default_rng(9)
+    prompt = rng.integers(0, CFG.vocab_size, size=4).astype(np.int32)
+    engine = ServeEngine(CFG, params, slots=1, max_len=48)
+    req = Request(prompt=prompt, max_new_tokens=20, deadline_s=5.0)
+    assert engine.submit(req)
+    engine.step()                            # prefill + first decode step
+    assert len(req.output) == 2
+    req.submit_t -= 10.0                     # force the deadline to lapse
+    engine.step()
+
+    assert not req.done
+    assert req.reject_reason == "deadline"
+    assert req.output == _greedy_reference(params, prompt, 3)  # partial
+    assert all(r is None for r in engine.slot_req)
+    assert engine.metrics.requests_expired == 1
+    assert engine.metrics.requests_completed == 0
+    engine.run()                             # nothing left; terminates
+    assert engine.last_stats["steps"] == 0
+    snap = engine.stats_snapshot()
+    assert snap["requests"]["queue_depth"] == 0
+    assert snap["failures"] == {"rejected": 0, "expired": 1}
