@@ -11,11 +11,20 @@ trajectory is visible in green runs too.
 
 Usage:
   python -m benchmarks.compare BENCH_baseline.json BENCH_run.json \
-      [--max-regress 0.25] [--min-speedup 1.0]
+      [--max-regress 0.25] [--min-speedup 1.0] \
+      [--require SUITE:ROW:FIELD>=MIN ...]
 
 ``--min-speedup`` optionally also asserts the current total is at least
 that many times faster than the baseline total (e.g. ``--min-speedup 5``
 certifies the tentpole's acceptance bar).
+
+``--require`` gates an **absolute** number inside the current run — a
+named field of a named row of a named suite must be >= the bound, e.g.
+``--require "explore_scale:guided/halving:speedup>=10"`` certifies the
+batched/guided exploration pipeline's 10x bar.  Absolute gates don't
+need the suite to exist in the baseline (within-run ratios like
+``speedup`` are machine-speed independent, which is exactly why they
+gate this way); a missing suite/row/field fails the gate.
 
 Suites present in the current run but absent from the baseline (a suite
 added after the baseline was frozen, e.g. ``schedule``) are
@@ -47,6 +56,54 @@ def _suite_walls(summary: Dict) -> Dict[str, float]:
         if s.get("ok") and isinstance(s.get("wall_s"), (int, float)):
             out[name] = float(s["wall_s"])
     return out
+
+
+def parse_require(spec: str) -> Tuple[str, str, str, float]:
+    """``"suite:row:field>=min"`` → ``(suite, row, field, min)``.
+
+    The row name may contain ``/`` (benchmark rows do); only the two
+    framing ``:`` and the ``>=`` are structural."""
+    head, _, bound = spec.partition(">=")
+    parts = head.split(":", 2)
+    if not bound or len(parts) != 3 or not all(p.strip() for p in parts):
+        raise ValueError(
+            f"bad --require spec {spec!r}; want SUITE:ROW:FIELD>=MIN")
+    try:
+        minimum = float(bound)
+    except ValueError:
+        raise ValueError(f"bad --require bound in {spec!r}") from None
+    suite, row, field = (p.strip() for p in parts)
+    return suite, row, field, minimum
+
+
+def check_requirements(current: Dict, requires: List[str]) -> List[str]:
+    """Absolute-number gates against the current run's suite rows."""
+    failures: List[str] = []
+    suites = current.get("suites", {})
+    for spec in requires:
+        suite, row_name, field, minimum = parse_require(spec)
+        s = suites.get(suite)
+        if not s or not s.get("ok"):
+            failures.append(f"require {spec!r}: suite {suite!r} "
+                            f"missing or failed in current run")
+            continue
+        row = next((r for r in current.get("rows", [])
+                    if r.get("suite") == suite
+                    and r.get("name") == row_name), None)
+        if row is None:
+            failures.append(f"require {spec!r}: row {row_name!r} not in "
+                            f"suite {suite!r}")
+            continue
+        val = row.get(field)
+        if not isinstance(val, (int, float)):
+            failures.append(f"require {spec!r}: field {field!r} missing "
+                            f"or non-numeric (got {val!r})")
+        elif val < minimum:
+            failures.append(f"require {spec!r}: {val:g} < {minimum:g}")
+        else:
+            print(f"require OK: {suite}:{row_name}:{field} = {val:g} "
+                  f">= {minimum:g}")
+    return failures
 
 
 def compare_summaries(baseline: Dict, current: Dict, *,
@@ -115,7 +172,17 @@ def main(argv=None) -> int:
     ap.add_argument("--min-speedup", type=float, default=None,
                     help="additionally require current total to be at "
                          "least this many times faster than baseline")
+    ap.add_argument("--require", action="append", default=[],
+                    metavar="SUITE:ROW:FIELD>=MIN",
+                    help="absolute gate on a row field of the current "
+                         "run (repeatable)")
     args = ap.parse_args(argv)
+    try:
+        for spec in args.require:
+            parse_require(spec)
+    except ValueError as e:
+        print(f"compare: {e}", file=sys.stderr)
+        return 2
 
     try:
         with open(args.baseline) as f:
@@ -132,6 +199,7 @@ def main(argv=None) -> int:
     failures, rows = compare_summaries(
         baseline, current, max_regress=args.max_regress,
         min_speedup=args.min_speedup)
+    failures += check_requirements(current, args.require)
     _print_table(rows)
     if failures:
         print("\nPERF GATE FAILED:")

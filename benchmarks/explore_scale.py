@@ -1,0 +1,156 @@
+"""Million-point exploration throughput: per-point vs batched vs guided.
+
+The PR 10 tentpole claims the explore plane turns enumeration-bound
+sweeps into an amortised pipeline.  This suite measures the three
+execution modes on ONE variant-heavy grid — ratios × (3 schedule
+policies × 8 invocation counts × 2 calibration profiles) = 48
+variants per tile-grid-identical group, a 4-layer fc-512 workload —
+and reports throughput as both ``us_per_call`` per point and
+``points_per_s``:
+
+  ``per_point/eval``   every point through ``simulate()`` + per-job
+                       content keying: the pre-PR-10 baseline path.
+  ``batched/eval``     the same grid through ``SweepRunner(batch_size=…)``:
+                       grouped ``simulate_variants`` costing + stacked
+                       tile-grid precompute + shared-subform keying.
+                       Rows are asserted equal to the per-point rows —
+                       this speedup is *bit-identity preserving*.
+  ``guided/halving``   the full pipeline over the same space:
+                       batch-shared monolithic estimates rank ALL
+                       points, the top eighth promotes to batched full
+                       evaluation.  Same space coverage, fraction of
+                       the wall time — the ROADMAP's 10⁶-points-on-a-
+                       laptop mode.
+
+``speedup`` on the batched/guided rows is points/s over the per-point
+row; ``guided/halving``'s is the gated ≥10× number (see
+``benchmarks/compare.py --require`` in CI).  Each mode clears the
+process-wide tile-grid/keep-grid/canonical memos and rebuilds its
+points, so every path starts cold — nothing leaks between modes.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+from repro.calibrate.profile import resolve_profile
+from repro.core import FlexBlockSpec, FullBlock, default_mapping, usecase_arch
+from repro.core.mapping import default_tile_cache
+from repro.core.schedule import SchedulePolicy
+from repro.core.workload import Workload
+from repro.explore import (ExploreJob, PointSpace, SearchPolicy, SweepRunner,
+                           run_search)
+from repro.explore.sweeps import GridPoint, run_grid
+
+N_RATIOS = 100
+POLICIES = ("monolithic", "partitioned", "resident")
+INVOCATIONS = (1, 2, 3, 4, 6, 8, 12, 16)
+PROFILES = (False, True)
+VARIANTS = [(pol, inv, p) for pol in POLICIES for inv in INVOCATIONS
+            for p in PROFILES]
+SIZE = N_RATIOS * len(VARIANTS)
+BATCH = 4096
+
+
+def _wl() -> Workload:
+    w = Workload("scale_bench")
+    w.fc("fc1", 512, 512)
+    w.fc("fc2", 512, 512, inputs=("fc1",))
+    w.fc("fc3", 512, 512, inputs=("fc2",))
+    w.fc("fc4", 512, 256, inputs=("fc3",))
+    return w
+
+
+def _space(arch, prof) -> PointSpace:
+    """The suite's lazily-indexed grid; shares the heavy objects across
+    variants exactly the way ``repro.explore __main__``'s scale factory
+    does (one workload per ratio, one dense baseline per variant)."""
+    m = default_mapping(arch)
+    dense_wl = _wl()
+    scheds = {(pol, inv): SchedulePolicy(policy=pol, invocations=inv)
+              for pol in POLICIES for inv in INVOCATIONS}
+    dense_jobs: Dict[tuple, ExploreJob] = {}
+    wl_cache: Dict[int, Workload] = {}
+
+    def factory(i: int) -> GridPoint:
+        ri, vi = divmod(i, len(VARIANTS))
+        pol, inv, use_p = VARIANTS[vi]
+        p = prof if use_p else None
+        ratio = 0.05 + 0.9 * ri / (N_RATIOS - 1)
+        wl = wl_cache.get(ri)
+        if wl is None:
+            wl = wl_cache[ri] = _wl().set_sparsity(
+                FlexBlockSpec((FullBlock(16, 16, ratio),), name="full16"))
+        dk = (pol, inv, use_p)
+        dense = dense_jobs.get(dk)
+        if dense is None:
+            dense = dense_jobs[dk] = ExploreJob.dense(
+                arch, dense_wl, m, profile=p, schedule=scheds[(pol, inv)])
+        return GridPoint(
+            ExploreJob.simulate(arch, wl, m, profile=p,
+                                schedule=scheds[(pol, inv)]),
+            dense, meta=(("ratio", ratio),))
+
+    return PointSpace(SIZE, factory, (N_RATIOS, len(VARIANTS)))
+
+
+def _cold_start() -> None:
+    """Drop every process-wide memo a previous mode may have warmed."""
+    default_tile_cache().clear()
+    from repro.core import mapping as _mapping
+    _mapping._KEEP_GRID_CACHE.clear()
+    from repro.explore import job as _job
+    _job._CANON_MEMO.clear()
+
+
+def run(workers: int = 1) -> List[Dict]:
+    arch = usecase_arch(4)
+    prof = resolve_profile("default")
+    rows: List[Dict] = []
+
+    _cold_start()
+    space = _space(arch, prof)
+    points = [space.factory(i) for i in range(SIZE)]
+    t0 = time.perf_counter()
+    ref = run_grid(points, runner=SweepRunner(workers=workers))
+    per_point_s = time.perf_counter() - t0
+    rows.append({"name": "per_point/eval",
+                 "us_per_call": per_point_s / SIZE * 1e6,
+                 "points": SIZE,
+                 "points_per_s": round(SIZE / per_point_s, 1)})
+
+    _cold_start()
+    space = _space(arch, prof)
+    points = [space.factory(i) for i in range(SIZE)]
+    t0 = time.perf_counter()
+    res = run_grid(points, runner=SweepRunner(workers=workers,
+                                              batch_size=BATCH))
+    batched_s = time.perf_counter() - t0
+    if res.rows != ref.rows:            # the bit-identity contract
+        raise AssertionError("batched rows diverge from per-point rows")
+    rows.append({"name": "batched/eval",
+                 "us_per_call": batched_s / SIZE * 1e6,
+                 "points": SIZE,
+                 "points_per_s": round(SIZE / batched_s, 1),
+                 "speedup": round(per_point_s / batched_s, 2)})
+
+    _cold_start()
+    space = _space(arch, prof)
+    t0 = time.perf_counter()
+    sr = run_search(space, SearchPolicy(kind="halving", budget=SIZE // 8),
+                    runner=SweepRunner(workers=workers, batch_size=BATCH),
+                    chunk=BATCH)
+    guided_s = time.perf_counter() - t0
+    rows.append({"name": "guided/halving",
+                 "us_per_call": guided_s / SIZE * 1e6,
+                 "points": SIZE,
+                 "estimated": sr.estimated,
+                 "evaluated": sr.points,
+                 "points_per_s": round(SIZE / guided_s, 1),
+                 "speedup": round(per_point_s / guided_s, 2)})
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

@@ -6,6 +6,7 @@
   mapping_exploration  paper Fig. 11–12         (§VII-C use-case)
   schedule_exploration paper §IV use-case 2     (multi-macro scheduling)
   traced_lm            traced-DAG pipeline      (fixture replay, jax-free)
+  explore_scale        §VII scale pipeline      (per-point vs batched vs guided)
 
 Usage:  PYTHONPATH=src python -m benchmarks.run [--only NAME] [--csv FILE]
                                                 [--workers N] [--json [FILE]]
@@ -37,9 +38,10 @@ import statistics
 import time
 from typing import Dict, List
 
-from . import (analysis_preflight, fault_overhead, mapping_exploration,
-               obs_overhead, runtime_analysis, schedule_exploration,
-               sparsity_exploration, traced_lm, validation)
+from . import (analysis_preflight, explore_scale, fault_overhead,
+               mapping_exploration, obs_overhead, runtime_analysis,
+               schedule_exploration, sparsity_exploration, traced_lm,
+               validation)
 
 SUITES = {
     "validation": validation.run,
@@ -51,10 +53,11 @@ SUITES = {
     "analysis": analysis_preflight.run,
     "obs": obs_overhead.run,
     "faults": fault_overhead.run,
+    "explore_scale": explore_scale.run,
 }
 
 # suites built on the repro.explore engine accept a worker count
-PARALLEL_SUITES = ("sparsity", "mapping", "schedule")
+PARALLEL_SUITES = ("sparsity", "mapping", "schedule", "explore_scale")
 
 
 def _fmt(row: Dict) -> str:

@@ -52,6 +52,17 @@ Codes
   simulations run under different robustness settings would stop
   sharing cache entries (and a fault-injected chaos run would poison
   the fault-free cache namespace).
+* ``CIM207`` (error) — batching/search execution knobs leaking into the
+  cache key: an ``ExploreJob`` field or ``simulate()`` parameter with a
+  batch/search/budget name, or ``explore/job.py`` importing
+  ``repro.explore.batch`` / ``repro.explore.search``.  Batched
+  evaluation is bit-identical to per-point evaluation by contract
+  (``tests/test_batch.py``), and a guided search merely chooses *which*
+  points evaluate — neither changes what a job computes.  If either
+  entered ``canonical()``, a point found by ``--search halving`` under
+  ``--batch 256`` would stop sharing its store entry with the same
+  point in a plain exhaustive sweep, and resumability across execution
+  configurations would dissolve.
 """
 from __future__ import annotations
 
@@ -77,6 +88,12 @@ NON_FORWARDED_JOB_FIELDS = frozenset({"kind"})
 # on SweepRunner, never on the cache-key surface
 _FAULT_TOKENS = frozenset({"fault", "faults", "retry", "retries",
                            "timeout", "timeouts", "backoff"})
+
+# name tokens that mark a batching/search execution knob (CIM207):
+# batched evaluation and guided search change how a sweep executes,
+# never what a job computes
+_BATCH_TOKENS = frozenset({"batch", "batched", "batches", "search",
+                           "budget"})
 
 _HISTORY_RE = re.compile(r"^\s*#\s*(\d+)\s*:")
 
@@ -160,12 +177,12 @@ def _history_entries(lines: List[str], assign_lineno: int) -> Set[int]:
 class CacheKeyPass(AnalysisPass):
     name = "cache-key"
     codes = ("CIM200", "CIM201", "CIM202", "CIM203", "CIM204", "CIM205",
-             "CIM206")
+             "CIM206", "CIM207")
     description = ("every simulate() knob must flow through ExploreJob, "
                    "canonical() must hash fields generically, "
                    "CACHE_SCHEMA history must cover the current value, "
-                   "and nothing obs- or fault-policy-derived may enter "
-                   "the key")
+                   "and nothing obs-, fault-policy-, or batch/search-"
+                   "derived may enter the key")
 
     def _missing(self, what: str, rel: str) -> Diagnostic:
         return self.diag(
@@ -341,6 +358,57 @@ class CacheKeyPass(AnalysisPass):
                          "(evaluate_job, ResultStore.put); job.py "
                          "defines the memoisation contract and stays "
                          "fault-free by construction"))
+
+        # CIM207 — batching/search knobs may not enter the cache key.
+        # Same two leak shapes again: (a) a batch/search/budget-named
+        # field or parameter, (b) explore/job.py importing the batched
+        # evaluator or the search layer.
+        for name, lineno, rel in (
+                [(n, ln, job_rel) for n, ln in sorted(fields.items())]
+                + [(n, ln, cost_rel) for n, ln in sorted(params.items())]):
+            tokens = set(name.lower().split("_")) | {name.lower()}
+            if tokens & _BATCH_TOKENS:
+                diags.append(self.diag(
+                    "CIM207", Severity.ERROR,
+                    f"batch/search execution knob {name!r} in the "
+                    f"cache-key surface — batched evaluation is "
+                    f"bit-identical by contract and search only picks "
+                    f"which points run",
+                    file=rel, line=lineno,
+                    hint="put batching on SweepRunner (batch_size) and "
+                         "search on SearchPolicy; a job's key must not "
+                         "vary with how the sweep is dispatched, or "
+                         "batched and per-point runs would stop sharing "
+                         "one store"))
+        for node in ast.walk(ctx.tree(job_path)):
+            target = ""
+            if isinstance(node, ast.Import):
+                for alias in node.names:
+                    if alias.name.split(".")[:3] in (
+                            [pkg, "explore", "batch"],
+                            [pkg, "explore", "search"]):
+                        target = alias.name
+            elif isinstance(node, ast.ImportFrom):
+                mod = node.module or ""
+                if node.level > 0:
+                    names = {a.name for a in node.names}
+                    if mod.split(".")[0] in ("batch", "search") or (
+                            not mod and names & {"batch", "search"}):
+                        target = f"{pkg}.explore.{mod or 'batch/search'}"
+                elif mod.split(".")[:3] in ([pkg, "explore", "batch"],
+                                            [pkg, "explore", "search"]):
+                    target = mod
+            if target:
+                diags.append(self.diag(
+                    "CIM207", Severity.ERROR,
+                    f"explore/job.py imports {target} — the cache-key "
+                    f"module must not depend on the batch/search "
+                    f"execution layer",
+                    file=job_rel, line=node.lineno,
+                    hint="the dependency points the other way: batch.py "
+                         "derives base keys FROM job.canonical; job.py "
+                         "defines the memoisation contract and stays "
+                         "dispatch-free by construction"))
 
         # CIM204 — CACHE_SCHEMA history entry for the current value
         schema = _schema_assignment(ctx.tree(job_path))

@@ -47,8 +47,8 @@ from .schedule import OpExec, SchedulePolicy, build_schedule
 from . import workload as _workload
 from .workload import OpNode, Workload
 
-__all__ = ["simulate", "simulate_reference", "dense_baseline", "dense_twin",
-           "compare", "op_class"]
+__all__ = ["simulate", "simulate_variants", "simulate_reference",
+           "dense_baseline", "dense_twin", "compare", "op_class"]
 
 
 def op_class(op: OpNode) -> str:
@@ -506,51 +506,23 @@ def _op_execs(arch: CIMArch,
     return execs
 
 
-def simulate(
+def _finish_report(
     arch: CIMArch,
     workload: Workload,
     mapping: MappingSpec,
-    *,
-    input_sparsity: Optional[Dict[str, float]] = None,
-    masks: Optional[Dict[str, np.ndarray]] = None,
-    profile: Optional[CalibrationProfile] = None,
-    tile_cache: Optional[TileGridCache] = None,
-    schedule: Optional[SchedulePolicy] = None,
+    policy: SchedulePolicy,
+    costed: List[Tuple[OpNode, Optional[OpCost], _OpLedger]],
 ) -> CostReport:
-    """Run the CIMinus cost simulation.
+    """Schedule + aggregate one costed op list into a :class:`CostReport`.
 
-    ``input_sparsity`` maps op name → skippable-bit ratio (from
-    :mod:`repro.core.input_sparsity` profiling).
-    ``masks`` maps op name → FullBlock block keep-grid from the pruning
-    workflow; otherwise seeded random grids with exact Φ are synthesised
-    (the paper's auto-generated mask path).
-    ``profile`` is an optional measured :class:`CalibrationProfile`
-    (see :mod:`repro.calibrate`): each op's latency is divided by the
-    profile's efficiency factor for its :func:`op_class` — a class
-    achieving half the fitted roofline takes twice the analytic latency
-    — and the static-energy term follows the stretched schedule.
-    Dynamic energy is access-count-based and therefore unchanged.
-    ``profile=None`` (and any profile with all-1.0 efficiencies, like
-    the bundled default) reproduces the analytic model bit-for-bit.
-    ``tile_cache`` overrides the process-wide
-    :class:`~repro.core.mapping.TileGridCache` the tiling hot path
-    memoises into (``None`` = share the module default, which is what
-    sweep workers rely on to warm once per process).
-    ``schedule`` selects the multi-macro scheduling policy
-    (:mod:`repro.core.schedule`): ``None`` (= the default
-    ``SchedulePolicy()``) is the historical op-serial walk on the whole
-    organisation, bit-for-bit; ``"partitioned"`` overlaps independent
-    DAG branches on disjoint macro subsets; ``"resident"`` pins weights
-    across ``invocations`` repeated executions.  The resolved
-    :class:`~repro.core.schedule.ScheduleResult` is attached to the
-    report and mirrored into each op's ``start_cycle`` / ``end_cycle``.
+    This is :func:`simulate`'s tail, factored out so
+    :func:`simulate_variants` can re-aggregate ONE ``_cost_ops`` pass
+    under several ``(profile, schedule)`` variants.  Every float
+    operation happens in the same order as the historical inline code,
+    so the extraction is bit-identical by construction.  Mutates the
+    ``OpCost`` objects in ``costed`` (start/end cycles) — variant
+    callers must pass per-variant copies.
     """
-    arch.validate()
-    policy = schedule if schedule is not None else SchedulePolicy()
-    costed = _cost_ops(arch, workload, mapping,
-                       input_sparsity=input_sparsity, masks=masks,
-                       profile=profile, tile_cache=tile_cache)
-
     bands_per_macro = arch.macro.rows // arch.macro.sub_rows
     sched = build_schedule(workload, policy, _op_execs(arch, costed),
                            n_macros=arch.n_macros,
@@ -601,6 +573,113 @@ def simulate(
         index_capacity_ok=(cap == 0 or idx_bits <= cap),
         schedule=sched,
     )
+
+
+def simulate(
+    arch: CIMArch,
+    workload: Workload,
+    mapping: MappingSpec,
+    *,
+    input_sparsity: Optional[Dict[str, float]] = None,
+    masks: Optional[Dict[str, np.ndarray]] = None,
+    profile: Optional[CalibrationProfile] = None,
+    tile_cache: Optional[TileGridCache] = None,
+    schedule: Optional[SchedulePolicy] = None,
+) -> CostReport:
+    """Run the CIMinus cost simulation.
+
+    ``input_sparsity`` maps op name → skippable-bit ratio (from
+    :mod:`repro.core.input_sparsity` profiling).
+    ``masks`` maps op name → FullBlock block keep-grid from the pruning
+    workflow; otherwise seeded random grids with exact Φ are synthesised
+    (the paper's auto-generated mask path).
+    ``profile`` is an optional measured :class:`CalibrationProfile`
+    (see :mod:`repro.calibrate`): each op's latency is divided by the
+    profile's efficiency factor for its :func:`op_class` — a class
+    achieving half the fitted roofline takes twice the analytic latency
+    — and the static-energy term follows the stretched schedule.
+    Dynamic energy is access-count-based and therefore unchanged.
+    ``profile=None`` (and any profile with all-1.0 efficiencies, like
+    the bundled default) reproduces the analytic model bit-for-bit.
+    ``tile_cache`` overrides the process-wide
+    :class:`~repro.core.mapping.TileGridCache` the tiling hot path
+    memoises into (``None`` = share the module default, which is what
+    sweep workers rely on to warm once per process).
+    ``schedule`` selects the multi-macro scheduling policy
+    (:mod:`repro.core.schedule`): ``None`` (= the default
+    ``SchedulePolicy()``) is the historical op-serial walk on the whole
+    organisation, bit-for-bit; ``"partitioned"`` overlaps independent
+    DAG branches on disjoint macro subsets; ``"resident"`` pins weights
+    across ``invocations`` repeated executions.  The resolved
+    :class:`~repro.core.schedule.ScheduleResult` is attached to the
+    report and mirrored into each op's ``start_cycle`` / ``end_cycle``.
+    """
+    arch.validate()
+    policy = schedule if schedule is not None else SchedulePolicy()
+    costed = _cost_ops(arch, workload, mapping,
+                       input_sparsity=input_sparsity, masks=masks,
+                       profile=profile, tile_cache=tile_cache)
+    return _finish_report(arch, workload, mapping, policy, costed)
+
+
+def _apply_profile(
+    costed: List[Tuple[OpNode, Optional[OpCost], _OpLedger]],
+    profile: Optional[CalibrationProfile],
+) -> List[Tuple[OpNode, Optional[OpCost], _OpLedger]]:
+    """Copy a profile-less ``_cost_ops`` result and apply ``profile``.
+
+    A profile only ever divides each op's ``latency_cycles`` /
+    ``load_cycles`` at the very end of :func:`_cost_ops`, so dividing
+    the same floats here produces bit-identical values.  OpCosts are
+    shallow-copied even for ``profile=None`` because
+    :func:`_finish_report` mutates their start/end cycles per variant;
+    ledgers are immutable under aggregation and shared.
+    """
+    out: List[Tuple[OpNode, Optional[OpCost], _OpLedger]] = []
+    for op, oc, led in costed:
+        if oc is not None:
+            oc = copy.copy(oc)
+            if profile is not None:
+                eff = profile.efficiency_for(op_class(op))
+                if eff != 1.0:
+                    oc.latency_cycles /= eff
+                    oc.load_cycles /= eff
+        out.append((op, oc, led))
+    return out
+
+
+def simulate_variants(
+    arch: CIMArch,
+    workload: Workload,
+    mapping: MappingSpec,
+    *,
+    input_sparsity: Optional[Dict[str, float]] = None,
+    masks: Optional[Dict[str, np.ndarray]] = None,
+    tile_cache: Optional[TileGridCache] = None,
+    variants: List[Tuple[Optional[CalibrationProfile],
+                         Optional[SchedulePolicy]]],
+) -> List[CostReport]:
+    """Evaluate one grid point under several ``(profile, schedule)``
+    variants, paying the per-op costing pass (tiling, band packing,
+    access ledgers — the dominant cost) exactly once.
+
+    Returns one :class:`CostReport` per variant, in order, each
+    bit-identical to ``simulate(..., profile=p, schedule=s)`` — the
+    batched-evaluation contract the explore plane's differential tests
+    pin down.  Profiles are applied as a post-pass (see
+    :func:`_apply_profile`) because :func:`_cost_ops` itself only
+    touches profile efficiencies after all costing is done.
+    """
+    arch.validate()
+    costed = _cost_ops(arch, workload, mapping,
+                       input_sparsity=input_sparsity, masks=masks,
+                       profile=None, tile_cache=tile_cache)
+    reports: List[CostReport] = []
+    for prof, sched_pol in variants:
+        policy = sched_pol if sched_pol is not None else SchedulePolicy()
+        reports.append(_finish_report(arch, workload, mapping, policy,
+                                      _apply_profile(costed, prof)))
+    return reports
 
 
 def simulate_reference(

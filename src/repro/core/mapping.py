@@ -42,8 +42,9 @@ from .workload import OpNode
 
 __all__ = [
     "ReshapeSpec", "Loop", "MappingSpec", "TileGrid", "TileGridCache",
-    "reshape_and_compress", "reference_loops", "default_tile_cache",
-    "spatial_mapping", "duplicate_mapping", "default_mapping",
+    "reshape_and_compress", "precompute_tile_grids", "reference_loops",
+    "default_tile_cache", "spatial_mapping", "duplicate_mapping",
+    "default_mapping",
 ]
 
 
@@ -449,13 +450,50 @@ def reshape_and_compress(
     if not _REFERENCE:
         if cache is None:
             cache = _DEFAULT_TILE_CACHE
-        key = (op.K, op.N, spec, reshape, tile_k, tile_n,
-               arch.macro.sub_rows, arch.macro.sub_cols,
-               _mask_identity(block_keep, spec))
+        key = _grid_key(op, arch, reshape, spec, tile_k, tile_n, block_keep)
         hit = cache.get(key)
         if hit is not None:
             return hit
 
+    k_cols, k_base, intra_fanin, misaligned = _column_profile(
+        op, arch, reshape, spec, block_keep)
+
+    # --- tiling -------------------------------------------------------------
+    n_eff = len(k_cols)
+    if _REFERENCE:
+        occ = _occupancy_loop(k_cols, k_base, tile_k, tile_n)
+    else:
+        occ = _occupancy_vectorized(k_cols, k_base, tile_k, tile_n)
+    k_cols.setflags(write=False)
+    occ.setflags(write=False)
+    grid = TileGrid(K=op.K, N=op.N, k_eff=k_cols, n_eff=n_eff,
+                    tile_k=tile_k, tile_n=tile_n, occupancy=occ,
+                    intra_fanin=intra_fanin, misaligned=misaligned)
+    if key is not None:
+        cache.put(key, grid)
+    return grid
+
+
+def _grid_key(op: OpNode, arch: CIMArch, reshape: ReshapeSpec,
+              spec: FlexBlockSpec, tile_k: int, tile_n: int,
+              block_keep: Optional[np.ndarray]) -> tuple:
+    """The :class:`TileGridCache` content key for one tiling request —
+    everything :func:`reshape_and_compress` reads (the *incoming*
+    reshape, before orientation resolution)."""
+    return (op.K, op.N, spec, reshape, tile_k, tile_n,
+            arch.macro.sub_rows, arch.macro.sub_cols,
+            _mask_identity(block_keep, spec))
+
+
+def _column_profile(
+    op: OpNode, arch: CIMArch, reshape: ReshapeSpec, spec: FlexBlockSpec,
+    block_keep: Optional[np.ndarray],
+) -> Tuple[np.ndarray, int, int, bool]:
+    """② The compressed column profile of one MVM op: the cheap half of
+    :func:`reshape_and_compress` (no tiling reductions).
+
+    Returns ``(k_cols, k_base, intra_fanin, misaligned)``.
+    """
     intra = spec.intra
     full = spec.full
 
@@ -480,7 +518,6 @@ def reshape_and_compress(
         k_base = math.ceil(op.K * intra.phi / intra.m)
 
     # --- FullBlock: block-grid compression (possibly ragged) --------------
-    n_eff = op.N
     misaligned = False
     if full is not None:
         f = full.bind((op.K, op.N))
@@ -519,20 +556,138 @@ def reshape_and_compress(
         lvl = max(reshape.slice_size, int(math.ceil(mean_len)))
         k_cols = np.full(width, lvl)
 
-    # --- tiling -------------------------------------------------------------
-    n_eff = len(k_cols)
+    return k_cols, k_base, intra_fanin, misaligned
+
+
+def precompute_tile_grids(
+    requests: List[Tuple[OpNode, CIMArch, ReshapeSpec,
+                         Optional[np.ndarray]]],
+    *,
+    cache: Optional[TileGridCache] = None,
+) -> Dict[tuple, TileGrid]:
+    """Batch-tile many MVM ops in stacked segment-reduction passes.
+
+    ``requests`` is a list of ``(op, arch, reshape, block_keep)``
+    tuples — exactly the arguments each per-op
+    :func:`reshape_and_compress` call would receive.  Requests are
+    deduped on the tile-grid content key, cache hits are skipped, and
+    the remaining cold grids are computed together: column profiles
+    sharing a ``(tile_k, tile_n, kt)`` shape concatenate into ONE
+    ``np.add.reduceat`` occupancy pass, and ALL new profiles share one
+    stacked ``maximum/minimum/add.reduceat`` band-stats pass whose
+    per-grid results seed each grid's ``band_stats`` memo.  Every
+    reduction is an exact integer segment reduction and every float
+    expression is elementwise, so the resulting grids are bit-identical
+    to per-op calls — the batched explore plane relies on that.
+
+    Under :func:`reference_loops` this is a no-op (the reference path
+    bypasses every cache by design).  Returns ``{key: TileGrid}`` for
+    every request (hits included) keyed by the content key.
+    """
     if _REFERENCE:
-        occ = _occupancy_loop(k_cols, k_base, tile_k, tile_n)
-    else:
-        occ = _occupancy_vectorized(k_cols, k_base, tile_k, tile_n)
-    k_cols.setflags(write=False)
-    occ.setflags(write=False)
-    grid = TileGrid(K=op.K, N=op.N, k_eff=k_cols, n_eff=n_eff,
-                    tile_k=tile_k, tile_n=tile_n, occupancy=occ,
-                    intra_fanin=intra_fanin, misaligned=misaligned)
-    if key is not None:
+        return {}
+    if cache is None:
+        cache = _DEFAULT_TILE_CACHE
+
+    # -- dedupe + cache probe ------------------------------------------------
+    out: Dict[tuple, TileGrid] = {}
+    cold: "OrderedDict[tuple, tuple]" = OrderedDict()   # key -> request
+    for op, arch, reshape, block_keep in requests:
+        spec = op.sparsity.bind((op.K, op.N))
+        tile_k, tile_n = reshape.tile or (arch.macro.rows, arch.macro.cols)
+        key = _grid_key(op, arch, reshape, spec, tile_k, tile_n, block_keep)
+        if key in out or key in cold:
+            continue
+        hit = cache.get(key)
+        if hit is not None:
+            out[key] = hit
+        else:
+            cold[key] = (op, arch, reshape, spec, tile_k, tile_n, block_keep)
+    if not cold:
+        return out
+
+    # -- column profiles (cheap) ----------------------------------------------
+    profiles: List[tuple] = []      # (key, request..., k_cols, k_base, ...)
+    for key, (op, arch, reshape, spec, tile_k, tile_n, bk) in cold.items():
+        k_cols, k_base, intra_fanin, misaligned = _column_profile(
+            op, arch, reshape, spec, bk)
+        profiles.append((key, op, arch, tile_k, tile_n,
+                         k_cols, k_base, intra_fanin, misaligned))
+
+    # -- stacked occupancy, grouped by (tile_k, tile_n, kt) --------------------
+    groups: "OrderedDict[tuple, List[int]]" = OrderedDict()
+    occs: Dict[int, np.ndarray] = {}
+    for i, (key, op, arch, tile_k, tile_n,
+            k_cols, k_base, *_rest) in enumerate(profiles):
+        if not k_cols.size:
+            # the vectorized kernel's empty-profile path; rare
+            occs[i] = _occupancy_vectorized(k_cols, k_base, tile_k, tile_n)
+            continue
+        kt, _ = _tile_counts(k_cols, k_base, tile_k, tile_n)
+        groups.setdefault((tile_k, tile_n, kt), []).append(i)
+    for (tile_k, tile_n, kt), idxs in groups.items():
+        cols = [profiles[i][5] for i in idxs]
+        nts = [max(1, math.ceil(len(c) / tile_n)) for c in cols]
+        offs = np.cumsum([0] + [len(c) for c in cols])
+        kc = np.concatenate([c.astype(np.int64, copy=False) for c in cols])
+        starts = np.concatenate(
+            [np.arange(nt) * tile_n + off
+             for nt, off in zip(nts, offs[:-1])])
+        lo = np.arange(kt, dtype=np.int64) * tile_k
+        rows = np.clip(kc[None, :] - lo[:, None], 0, tile_k)
+        sums = np.add.reduceat(rows, starts, axis=1)       # exact int sums
+        lens = np.diff(np.append(starts, len(kc)))
+        occ_all = (sums / lens / tile_k) * (lens / tile_n)
+        tile_offs = np.cumsum([0] + nts)
+        for i, a, b in zip(idxs, tile_offs[:-1], tile_offs[1:]):
+            occs[i] = occ_all[:, a:b]
+
+    # -- stacked band stats across ALL cold grids ------------------------------
+    # maxs/mins/sums are sub_rows-independent; the per-grid finish below
+    # applies each request's own macro.sub_rows, replaying
+    # _band_stats_vectorized's expressions elementwise (bit-identical).
+    band_cols: List[np.ndarray] = []
+    band_nts: List[int] = []
+    for key, op, arch, tile_k, tile_n, k_cols, k_base, *_rest in profiles:
+        kc = k_cols if len(k_cols) else np.array([op.K])
+        band_cols.append(kc.astype(np.int64, copy=False))
+        band_nts.append(max(1, math.ceil(len(k_cols) / tile_n)))
+    b_offs = np.cumsum([0] + [len(c) for c in band_cols])
+    b_kc = np.concatenate(band_cols)
+    b_starts_per = []
+    for (key, op, arch, tile_k, tile_n, k_cols, *_r), nt, off in zip(
+            profiles, band_nts, b_offs[:-1]):
+        b_starts_per.append(np.arange(nt) * tile_n + off)
+    b_starts = np.concatenate(b_starts_per)
+    maxs_all = np.maximum.reduceat(b_kc, b_starts)
+    mins_all = np.minimum.reduceat(b_kc, b_starts)
+    sums_all = np.add.reduceat(b_kc, b_starts)
+    lens_all = np.diff(np.append(b_starts, len(b_kc)))
+    t_offs = np.cumsum([0] + band_nts)
+
+    # -- assemble, seed memos, publish ------------------------------------------
+    for i, (key, op, arch, tile_k, tile_n,
+            k_cols, k_base, intra_fanin, misaligned) in enumerate(profiles):
+        occ = occs[i]
+        k_cols.setflags(write=False)
+        occ.setflags(write=False)
+        grid = TileGrid(K=op.K, N=op.N, k_eff=k_cols, n_eff=len(k_cols),
+                        tile_k=tile_k, tile_n=tile_n, occupancy=occ,
+                        intra_fanin=intra_fanin, misaligned=misaligned)
+        a, b = t_offs[i], t_offs[i + 1]
+        maxs, mins = maxs_all[a:b], mins_all[a:b]
+        sums, lens = sums_all[a:b], lens_all[a:b]
+        sel = maxs > 0
+        sub_rows = arch.macro.sub_rows
+        bands = -(-maxs[sel].astype(np.int64) // sub_rows)
+        tile_rows = sums[sel] / np.maximum(lens[sel], 1)
+        row_demand = float(sum(tile_rows.tolist()))
+        stats = (int(bands.sum()), int(sel.sum()), row_demand,
+                 bool(np.any(mins != maxs)))
+        grid.__dict__["_band_stats_memo"] = {sub_rows: stats}
         cache.put(key, grid)
-    return grid
+        out[key] = grid
+    return out
 
 
 def spatial_mapping(arch: CIMArch, *, rearrange: Optional[str] = None,

@@ -8,6 +8,10 @@ Named sweeps:
   (× rearrangement) on the 16-macro use-case arch.
 * ``lm``       — lower one of the repo's LM configs to an MVM DAG and
   sweep Table II patterns × ratios over it.
+* ``scale``    — a synthetic ratio × strategy × schedule lattice of
+  ``--points`` points, generated lazily and streamed in ``--chunk``
+  chunks: the million-point stress grid for the batched engine and the
+  guided-search layer (see ``docs/exploration.md``).
 
 Examples::
 
@@ -48,25 +52,41 @@ non-zero.  ``--check-store DIR`` audits a run directory::
         --timeout 300 --retries 2
     python -m repro.explore --resume runs/s50
     python -m repro.explore --check-store runs/s50
+
+Scale (see ``docs/exploration.md``): ``--batch [N]`` turns on batched
+evaluation — variant groups share one costing pass, tile grids
+precompute in stacked reduceat passes; results stay bit-identical and
+land under the same cache keys.  ``--search {exhaustive,halving,evolve}``
+with ``--budget``/``--seed`` walks the ``scale`` lattice under a guided
+:class:`repro.explore.search.SearchPolicy` instead of exhaustively::
+
+    python -m repro.explore scale --points 1000000 --batch \
+        --search halving --budget 2000 --run-dir runs/million
+    python -m repro.explore --resume runs/million   # re-evaluates nothing
 """
 from __future__ import annotations
 
 import argparse
 import json
 import sys
+from collections import OrderedDict
 from pathlib import Path
 from typing import Dict, List, Optional
 
 from ..analysis import AnalysisError, preflight
-from ..core import (TABLE_II_PATTERNS, MODEL_BUILDERS, hybrid, lm_workload,
-                    usecase_arch)
+from ..core import (TABLE_II_PATTERNS, MODEL_BUILDERS, FlexBlockSpec,
+                    FullBlock, hybrid, lm_workload, usecase_arch)
+from ..core.mapping import default_mapping
 from ..core.presets import PRESET_ARCHS
 from ..core.schedule import POLICIES, SchedulePolicy
+from ..core.workload import Workload
 from .cache import KeyJournal, ResultCache, ResultStore
-from .job import CACHE_SCHEMA
+from .job import CACHE_SCHEMA, ExploreJob
 from .pareto import DEFAULT_OBJECTIVES
 from .runner import SweepFailure, SweepRunner
-from .sweeps import SweepResult, mapping_sweep, sparsity_sweep
+from .search import (SEARCH_KINDS, PointSpace, SearchPolicy, SearchResult,
+                     run_search)
+from .sweeps import (GridPoint, SweepResult, mapping_sweep, sparsity_sweep)
 
 _ROW_COLS = ("pattern", "ratio", "mapping", "org", "rearrange", "schedule",
              "latency_ms", "energy_uj", "utilization", "speedup",
@@ -173,7 +193,7 @@ def _runner(args: argparse.Namespace,
         timeout_s=args.timeout, max_retries=args.retries,
         backoff_s=args.backoff,
         failure_mode="degrade" if args.degrade else "strict",
-        journal=journal)
+        journal=journal, batch_size=args.batch)
 
 
 def _resume(run_dir: str) -> int:
@@ -225,6 +245,125 @@ def _check_store(run_dir: str) -> int:
     return 0
 
 
+_SCALE_STRATEGIES = ("spatial", "duplicate")
+_SCALE_POLICIES = ("monolithic", "partitioned")
+
+
+def _scale_workload() -> Workload:
+    """The fixed DAG every scale point sweeps: two FC layers, small
+    enough that a single point evaluates in sub-millisecond time."""
+    w = Workload("scale")
+    w.fc("fc1", 128, 128)
+    w.fc("fc2", 128, 64, inputs=("fc1",))
+    return w
+
+
+def _scale_space(n_points: int, arch) -> PointSpace:
+    """A lazily-generated ratio × strategy × schedule lattice of at
+    least ``n_points`` points.
+
+    The schedule axis is innermost so a point and its schedule variants
+    are adjacent in flat-index order — they land in the same stream
+    chunk and collapse into one batched costing pass.  The four dense
+    baselines (strategy × policy) are shared by every ratio, so a
+    million-point space evaluates exactly four baseline jobs.
+    """
+    inner = len(_SCALE_STRATEGIES) * len(_SCALE_POLICIES)
+    n_ratios = max(1, -(-n_points // inner))
+    shape = (n_ratios, len(_SCALE_STRATEGIES), len(_SCALE_POLICIES))
+    mappings = {s: default_mapping(arch, s) for s in _SCALE_STRATEGIES}
+    scheds = {p: SchedulePolicy(policy=p) for p in _SCALE_POLICIES}
+    dense_wl = _scale_workload()
+    dense_jobs = {
+        (s, p): ExploreJob.dense(arch, dense_wl, mappings[s],
+                                 schedule=scheds[p])
+        for s in _SCALE_STRATEGIES for p in _SCALE_POLICIES}
+
+    # One sparsified workload OBJECT per ratio, in a small LRU: a
+    # point's schedule/strategy variants (and its revisits on resume or
+    # promotion) must reuse the same object so batch keying's
+    # shared-subform memo and estimate_jobs's identity grouping engage.
+    # Content is deterministic either way; sharing is purely throughput.
+    wl_lru: "OrderedDict[int, Workload]" = OrderedDict()
+
+    def _ratio_wl(ri: int):
+        wl = wl_lru.get(ri)
+        if wl is None:
+            ratio = 0.05 + 0.90 * (ri / max(1, n_ratios - 1))
+            spec = FlexBlockSpec((FullBlock(16, 16, ratio),), name="full16")
+            wl = _scale_workload().set_sparsity(spec)
+            wl_lru[ri] = wl
+            if len(wl_lru) > 4096:
+                wl_lru.popitem(last=False)
+        else:
+            wl_lru.move_to_end(ri)
+        return wl
+
+    def factory(i: int) -> GridPoint:
+        ri, rem = divmod(i, inner)
+        si, pi = divmod(rem, len(_SCALE_POLICIES))
+        ratio = 0.05 + 0.90 * (ri / max(1, n_ratios - 1))
+        strat = _SCALE_STRATEGIES[si]
+        pol = _SCALE_POLICIES[pi]
+        job = ExploreJob.simulate(arch, _ratio_wl(ri), mappings[strat],
+                                  schedule=scheds[pol])
+        return GridPoint(job, dense_jobs[(strat, pol)], meta=(
+            ("pattern", "full16"), ("ratio", round(ratio, 9)),
+            ("schedule", pol)))
+
+    return PointSpace(n_ratios * inner, factory, shape)
+
+
+def _finish_stream(result: SearchResult, args: argparse.Namespace) -> int:
+    est = f", {result.estimated} estimated" if result.estimated else ""
+    print(f"\n== scale sweep: {result.points} points evaluated{est} ==")
+    _print_rows(result.front_rows, "Pareto frontier")
+    k = args.top_k or 5
+    _print_rows(result.top_k(args.metric, k), f"top-{k} by {args.metric}")
+    print(f"\nengine: {result.stats.stats_text()}")
+    if args.csv:
+        # rows streamed to the CSV during evaluation — report, don't rewrite
+        print(f"wrote streamed rows to {args.csv}")
+    if args.json:
+        payload = json.dumps({"points": result.points,
+                              "estimated": result.estimated,
+                              "front": result.front_rows,
+                              "topk": result.topk_rows,
+                              "stats": result.stats.as_dict()}, indent=2)
+        try:
+            Path(args.json).write_text(payload + "\n")
+            print(f"wrote front + top-k + stats to {args.json}")
+        except OSError as e:
+            print(f"error: could not write {args.json}: {e}",
+                  file=sys.stderr)
+            return 1
+    return 0
+
+
+def _run_scale(args: argparse.Namespace, ap: argparse.ArgumentParser,
+               runner: SweepRunner) -> int:
+    arch = PRESET_ARCHS[args.arch]() if args.arch else usecase_arch(4)
+    space = _scale_space(args.points, arch)
+    policy = SearchPolicy(kind=args.search or "exhaustive",
+                          budget=args.budget, seed=args.seed,
+                          metric=args.metric)
+    print(f"scale lattice: {space.size} points {space.shape}, "
+          f"search={policy.kind}"
+          + (f", budget={policy.budget}" if policy.budget else ""),
+          file=sys.stderr)
+    try:
+        result = run_search(space, policy, runner=runner, chunk=args.chunk,
+                            csv_path=args.csv)
+    except SweepFailure as e:
+        print(f"error: {e}", file=sys.stderr)
+        if args.run_dir:
+            print(f"hint: `python -m repro.explore --resume "
+                  f"{args.run_dir}` retries only the failures",
+                  file=sys.stderr)
+        return 3
+    return _finish_stream(result, args)
+
+
 def _traced_wl_fn(ap: argparse.ArgumentParser, spec: str, seq_len: int):
     """Parse ``traced:<config>[:<step>]`` into a fresh-workload factory.
 
@@ -258,7 +397,7 @@ def main(argv: Optional[List[str]] = None) -> int:
         description=__doc__,
         formatter_class=argparse.RawDescriptionHelpFormatter)
     ap.add_argument("sweep", nargs="?", default=None,
-                    choices=("sparsity", "mapping", "lm"))
+                    choices=("sparsity", "mapping", "lm", "scale"))
     ap.add_argument("--model", choices=sorted(MODEL_BUILDERS),
                     default="resnet50", help="workload model (CNN sweeps)")
     ap.add_argument("--img", type=int, default=32,
@@ -331,6 +470,30 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--obs-dir", default=None, metavar="DIR",
                     help="trace directory for --obs (default "
                          "obs_runs/<run-id>)")
+    ap.add_argument("--batch", nargs="?", const=0, default=None, type=int,
+                    metavar="N",
+                    help="batched evaluation: group points sharing "
+                         "everything but profile/schedule and evaluate "
+                         "each group in one costing pass — bit-identical "
+                         "results, same cache keys (N points per "
+                         "dispatch; bare --batch sizes automatically)")
+    ap.add_argument("--search", choices=SEARCH_KINDS, default=None,
+                    help="guided search over the scale lattice (scale "
+                         "sweep only): halving promotes on cheap "
+                         "monolithic estimates, evolve mutates lattice "
+                         "knobs from a seeded RNG")
+    ap.add_argument("--budget", type=int, default=None, metavar="N",
+                    help="full evaluations a guided search may spend "
+                         "(default: size/4 for halving)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="RNG seed for --search evolve (deterministic "
+                         "per seed)")
+    ap.add_argument("--points", type=int, default=10000, metavar="N",
+                    help="scale sweep: lattice size (rounded up to a "
+                         "whole number of ratio rows)")
+    ap.add_argument("--chunk", type=int, default=4096, metavar="N",
+                    help="scale sweep: points per streamed chunk "
+                         "(bounds peak memory)")
     ap.add_argument("--schedule", default=None, metavar="POLICIES",
                     help="rerun the sweep across multi-macro scheduling "
                          "policies (comma list from "
@@ -392,6 +555,30 @@ def main(argv: Optional[List[str]] = None) -> int:
                      f"choose from {POLICIES} (or 'all')")
         if not policies:
             ap.error("--schedule must name at least one policy")
+
+    if args.search and args.sweep != "scale":
+        ap.error("--search applies to the scale sweep only")
+    if args.sweep == "scale":
+        for flag, name in ((args.profile, "--profile"),
+                           (args.schedule, "--schedule"),
+                           (args.workload, "--workload"),
+                           (args.diff_analytic, "--diff-analytic")):
+            if flag:
+                ap.error(f"{name} does not apply to the scale sweep")
+        if args.points < 1:
+            ap.error("--points must be >= 1")
+        if args.chunk < 1:
+            ap.error("--chunk must be >= 1")
+        try:
+            preflight(_scale_workload(),
+                      PRESET_ARCHS[args.arch]() if args.arch else None,
+                      strict=True, where="repro.explore")
+        except AnalysisError as e:
+            ap.error(str(e))
+        status = _run_scale(args, ap, _runner(args, journal))
+        if observer is not None:
+            print(f"obs: trace recorded to {observer.dir}", file=sys.stderr)
+        return status
 
     runner = _runner(args, journal)
     ratios = _parse_floats(ap, args.ratios)

@@ -60,6 +60,8 @@ from ..core.costmodel import simulate
 from ..core.report import CostReport
 from .. import obs
 from . import faults
+from .batch import (evaluate_batch, group_jobs, plan_batches,
+                    warm_job_keys)
 from .cache import KeyJournal, ResultCache
 from .job import ExploreJob
 
@@ -158,6 +160,9 @@ class RunStats:
     retried: int = 0            # extra dispatches caused by faults
     timed_out: int = 0          # dispatches cut off by the job timeout
     corrupt_entries: int = 0    # store entries dropped as undecodable
+    # batched-evaluation accounting (repro.explore.batch)
+    batched_points: int = 0     # points evaluated via the batched path
+    batches: int = 0            # batch dispatches that landed results
 
     @property
     def cache_hits(self) -> int:
@@ -181,6 +186,9 @@ class RunStats:
             text += (f" | faults: {self.failed} failed, "
                      f"{self.retried} retried, {self.timed_out} timed out, "
                      f"{self.corrupt_entries} corrupt entries dropped")
+        if self.batches:
+            text += (f" | batched: {self.batched_points} points in "
+                     f"{self.batches} batches")
         return text
 
     def merge(self, other: "RunStats") -> "RunStats":
@@ -198,6 +206,8 @@ class RunStats:
             retried=self.retried + other.retried,
             timed_out=self.timed_out + other.timed_out,
             corrupt_entries=self.corrupt_entries + other.corrupt_entries,
+            batched_points=self.batched_points + other.batched_points,
+            batches=self.batches + other.batches,
         )
 
 
@@ -238,6 +248,18 @@ class SweepRunner:
     ``journal``: optional :class:`~repro.explore.cache.KeyJournal`;
     every key is recorded immediately after its result lands in the
     cache, which is what makes ``--resume`` exact after a SIGKILL.
+    ``batch_size``: enable batched evaluation (:mod:`repro.explore.batch`):
+    pending jobs are grouped on their variant-free base key and
+    dispatched ``batch_size`` points at a time through
+    :func:`~repro.explore.batch.evaluate_batch` — bit-identical results
+    under the same cache keys, with the costing pass, tile-grid
+    precompute, and store transaction amortised per batch.  ``None``
+    (default) keeps the per-point path; ``0`` picks an automatic size.
+    A batch that fails for any reason (fault, crash, timeout) falls
+    back wholesale to the per-point machinery *uncharged*, so retry
+    budgets and crash conviction keep their per-job semantics.  Like
+    the fault knobs, ``batch_size`` is runner-level execution state by
+    contract — never a job field (analysis code CIM207).
     """
 
     def __init__(self, *, workers: Optional[int] = None,
@@ -247,7 +269,8 @@ class SweepRunner:
                  max_retries: int = 2,
                  backoff_s: float = 0.05,
                  failure_mode: str = "strict",
-                 journal: Optional[KeyJournal] = None):
+                 journal: Optional[KeyJournal] = None,
+                 batch_size: Optional[int] = None):
         if failure_mode not in ("strict", "degrade"):
             raise ValueError(f"failure_mode {failure_mode!r} is not "
                              f"'strict' or 'degrade'")
@@ -259,6 +282,9 @@ class SweepRunner:
         self.backoff_s = max(0.0, backoff_s)
         self.failure_mode = failure_mode
         self.journal = journal
+        if batch_size is not None and batch_size < 0:
+            raise ValueError(f"batch_size must be >= 0, got {batch_size}")
+        self.batch_size = batch_size
         if tile_cache_capacity is not None:
             # resize in place — replacing the process-wide cache would
             # throw away warm entries and break stats deltas other code
@@ -328,6 +354,110 @@ class SweepRunner:
         self.cache.put(job.key, rep)
         if self.journal is not None:
             self.journal.record(job.key)
+
+    def _commit_many(self, reports: Dict[str, CostReport],
+                     results: Dict[str, CostReport]) -> None:
+        """Batched :meth:`_commit`: one store transaction, then one
+        journal write — same store-then-journal durability order."""
+        results.update(reports)
+        self.cache.put_many(reports)
+        if self.journal is not None:
+            self.journal.record_many(reports)
+
+    def _auto_batch_size(self, n_pending: int) -> int:
+        """Pick a dispatch batch size: large enough to amortise the
+        costing pass and store transaction, small enough to keep every
+        worker busy and heartbeats flowing."""
+        if self.workers <= 1:
+            return 256
+        return max(16, min(512, -(-n_pending // (self.workers * 4))))
+
+    def _run_batched(self, pending: Sequence[ExploreJob],
+                     results: Dict[str, CostReport], stats: RunStats,
+                     hb) -> List[ExploreJob]:
+        """Dispatch variant-grouped batches; returns the jobs that must
+        fall back to the per-point path (their batch failed — fault,
+        crash, or timeout — each job uncharged so per-job retry budgets
+        and crash conviction semantics are preserved)."""
+        size = self.batch_size or self._auto_batch_size(len(pending))
+        batches: Deque[List[List[ExploreJob]]] = deque(
+            plan_batches(group_jobs(pending), size))
+        fallback: List[ExploreJob] = []
+        done = 0
+
+        def batch_jobs(batch: List[List[ExploreJob]]) -> List[ExploreJob]:
+            return [job for grp in batch for job in grp]
+
+        def land(batch: List[List[ExploreJob]],
+                 reports: Dict[str, CostReport]) -> None:
+            nonlocal done
+            self._commit_many(reports, results)
+            stats.batches += 1
+            stats.batched_points += len(reports)
+            done += len(reports)
+            hb.tick(done, workers=self.workers, batch=len(reports),
+                    batches=stats.batches)
+
+        if self.workers <= 1 or len(batches) == 1:
+            for batch in batches:
+                try:
+                    land(batch, evaluate_batch(batch))
+                except Exception:   # noqa: BLE001 - fall back per-point
+                    fallback.extend(batch_jobs(batch))
+            return fallback
+
+        inflight: Dict[Future, Tuple[List[List[ExploreJob]], float]] = {}
+        poll = None if self.timeout_s is None \
+            else max(0.02, min(0.25, self.timeout_s / 4))
+        while batches or inflight:
+            while batches and len(inflight) < self.workers:
+                batch = batches.popleft()
+                try:
+                    fut = self._get_pool().submit(evaluate_batch, batch)
+                except BrokenProcessPool:
+                    self._kill_pool()
+                    batches.appendleft(batch)
+                    break
+                inflight[fut] = (batch, time.monotonic())
+            if not inflight:
+                continue
+            done_set, _ = wait(set(inflight), timeout=poll,
+                               return_when=FIRST_COMPLETED)
+            broken = False
+            for fut in done_set:
+                batch, _t = inflight.pop(fut)
+                try:
+                    land(batch, fut.result())
+                except BrokenProcessPool:
+                    broken = True
+                    fallback.extend(batch_jobs(batch))
+                except Exception:   # noqa: BLE001 - fall back per-point
+                    fallback.extend(batch_jobs(batch))
+            if broken:
+                # the pool died with every other in-flight batch; their
+                # jobs fall back too rather than waiting on doomed futures
+                for batch, _t in inflight.values():
+                    fallback.extend(batch_jobs(batch))
+                inflight.clear()
+                self._kill_pool()
+                continue
+            if self.timeout_s is not None and inflight:
+                now = time.monotonic()
+                # a batch gets one per-point budget per member job; a
+                # genuinely hung job still trips it, just later — the
+                # per-point fallback then enforces the exact per-job cut
+                expired = [(f, b) for f, (b, t) in inflight.items()
+                           if now - t > self.timeout_s
+                           * max(1, len(batch_jobs(b)))]
+                if expired:
+                    for fut, batch in expired:
+                        inflight.pop(fut, None)
+                        fallback.extend(batch_jobs(batch))
+                    survivors = [b for b, _t in inflight.values()]
+                    inflight.clear()
+                    self._kill_pool()
+                    batches.extendleft(reversed(survivors))
+        return fallback
 
     def _run_sequential(self, pending: Sequence[ExploreJob],
                         results: Dict[str, CostReport], stats: RunStats,
@@ -473,7 +603,11 @@ class SweepRunner:
         t0 = time.perf_counter()
         stats = RunStats(requested=len(jobs), workers=self.workers)
 
-        # dedup while preserving first-seen order
+        # dedup while preserving first-seen order; under batching, key
+        # in one shared-subform pass (byte-identical keys, but shared
+        # field objects — the workload above all — encode once)
+        if self.batch_size is not None:
+            warm_job_keys(jobs)
         unique: Dict[str, ExploreJob] = {}
         for job in jobs:
             unique.setdefault(job.key, job)
@@ -481,29 +615,30 @@ class SweepRunner:
 
         cs = self.cache.stats
         mem0, disk0, cor0 = cs.memory_hits, cs.disk_hits, cs.corrupt_entries
-        results: Dict[str, CostReport] = {}
-        pending: List[ExploreJob] = []
-        for key, job in unique.items():
-            rep = self.cache.get(key)
-            if rep is not None:
-                results[key] = rep
-            else:
-                pending.append(job)
+        results: Dict[str, CostReport] = self.cache.get_many(list(unique))
+        pending: List[ExploreJob] = [job for key, job in unique.items()
+                                     if key not in results]
         stats.memory_hits = cs.memory_hits - mem0
         stats.disk_hits = cs.disk_hits - disk0
 
         failures: List[JobFailure] = []
         tg = _mapping.default_tile_cache()
         tg_h0, tg_m0 = tg.hits, tg.misses
+        n_pending = len(pending)
         if pending:
             # telemetry (no-ops when recording is off): rate-limited
             # heartbeats with points/s + ETA as evaluations complete
-            hb = obs.heartbeat("explore.run", total=len(pending))
-            if self.workers > 1 and len(pending) > 1:
-                self._run_parallel(pending, results, stats, failures, hb)
-            else:
-                self._run_sequential(pending, results, stats, failures, hb)
-        stats.evaluated = len(pending) - len(failures)
+            hb = obs.heartbeat("explore.run", total=n_pending)
+            if self.batch_size is not None and len(pending) > 1:
+                pending = self._run_batched(pending, results, stats, hb)
+            if pending:
+                if self.workers > 1 and len(pending) > 1:
+                    self._run_parallel(pending, results, stats, failures,
+                                       hb)
+                else:
+                    self._run_sequential(pending, results, stats,
+                                         failures, hb)
+        stats.evaluated = n_pending - len(failures)
         stats.corrupt_entries = cs.corrupt_entries - cor0
         stats.tile_grid_hits = tg.hits - tg_h0
         stats.tile_grid_misses = tg.misses - tg_m0

@@ -31,11 +31,13 @@ from ..core.schedule import POLICIES, SchedulePolicy
 from ..core.workload import Workload
 from .cache import ResultCache
 from .job import ExploreJob
-from .pareto import DEFAULT_OBJECTIVES, pareto_front, top_k
+from .pareto import (DEFAULT_OBJECTIVES, ParetoFront, StreamingTopK,
+                     pareto_front, top_k)
 from .runner import RunStats, SweepRunner
 
-__all__ = ["GridPoint", "SweepResult", "run_grid",
-           "sparsity_sweep", "mapping_sweep", "org_sweep", "schedule_sweep"]
+__all__ = ["GridPoint", "SweepResult", "StreamResult", "run_grid",
+           "stream_grid", "sparsity_sweep", "mapping_sweep", "org_sweep",
+           "schedule_sweep"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -103,33 +105,10 @@ def _row(arch: CIMArch, wl: Workload, spec_name: str, ratio, mapping: str,
     }
 
 
-def run_grid(points: Sequence[GridPoint], *,
-             runner: Optional[SweepRunner] = None,
-             workers: Optional[int] = None,
-             cache: Optional[ResultCache] = None,
-             tile_cache_capacity: Optional[int] = None) -> SweepResult:
-    """Evaluate a grid and assemble rows in point order.
-
-    ``tile_cache_capacity`` sizes the per-process tile-grid memo the
-    simulator shares across grid points (ignored when ``runner`` is
-    supplied — the runner already owns that setting)."""
-    runner = runner or SweepRunner(workers=workers, cache=cache,
-                                   tile_cache_capacity=tile_cache_capacity)
-    jobs: List[ExploreJob] = []
-    # warn-only pre-flight (strict rejection lives in the CLIs): each
-    # distinct workload/arch/mapping triple is validated once, O(ops),
-    # before any simulation burns time on ill-formed inputs
-    checked: set = set()
-    for p in points:
-        key = (id(p.job.workload), id(p.job.arch), id(p.job.mapping))
-        if key not in checked:
-            checked.add(key)
-            preflight(p.job.workload, p.job.arch, p.job.mapping,
-                      strict=False, where="explore.run_grid")
-    for p in points:
-        jobs.append(p.job)
-        jobs.append(p.dense)
-    reports = runner.run(jobs)
+def _assemble_rows(points: Sequence[GridPoint],
+                   reports: Sequence[Optional[CostReport]]) -> List[Dict]:
+    """Assemble comparison rows in point order from interleaved
+    ``[job, dense, job, dense, ...]`` reports."""
     rows: List[Dict] = []
     for i, p in enumerate(points):
         rep, dense = reports[2 * i], reports[2 * i + 1]
@@ -149,6 +128,45 @@ def run_grid(points: Sequence[GridPoint], *,
                    rep, compare(rep, dense))
         row.update(meta)
         rows.append(row)
+    return rows
+
+
+def _preflight_points(points: Sequence[GridPoint], checked: set,
+                      where: str) -> None:
+    # warn-only pre-flight (strict rejection lives in the CLIs): each
+    # distinct workload/arch/mapping triple is validated once, O(ops),
+    # before any simulation burns time on ill-formed inputs
+    for p in points:
+        key = (id(p.job.workload), id(p.job.arch), id(p.job.mapping))
+        if key not in checked:
+            checked.add(key)
+            preflight(p.job.workload, p.job.arch, p.job.mapping,
+                      strict=False, where=where)
+
+
+def run_grid(points: Sequence[GridPoint], *,
+             runner: Optional[SweepRunner] = None,
+             workers: Optional[int] = None,
+             cache: Optional[ResultCache] = None,
+             tile_cache_capacity: Optional[int] = None,
+             batch_size: Optional[int] = None) -> SweepResult:
+    """Evaluate a grid and assemble rows in point order.
+
+    ``tile_cache_capacity`` sizes the per-process tile-grid memo the
+    simulator shares across grid points; ``batch_size`` enables the
+    batched evaluation path (see :class:`SweepRunner`).  Both are
+    ignored when ``runner`` is supplied — the runner already owns those
+    settings."""
+    runner = runner or SweepRunner(workers=workers, cache=cache,
+                                   tile_cache_capacity=tile_cache_capacity,
+                                   batch_size=batch_size)
+    _preflight_points(points, set(), "explore.run_grid")
+    jobs: List[ExploreJob] = []
+    for p in points:
+        jobs.append(p.job)
+        jobs.append(p.dense)
+    reports = runner.run(jobs)
+    rows = _assemble_rows(points, reports)
     observer = obs.get_observer()
     if observer is not None:
         # observational artifact only: per-component energy attribution
@@ -162,6 +180,101 @@ def run_grid(points: Sequence[GridPoint], *,
         append_energy_csv(
             erows, observer.artifact_path("energy_components.csv"))
     return SweepResult(rows=rows, stats=runner.last_stats)
+
+
+@dataclasses.dataclass
+class StreamResult:
+    """What a :func:`stream_grid` run keeps: the incremental fronts and
+    merged accounting — NOT the full row list (that is the point)."""
+
+    front_rows: List[Dict]
+    topk_rows: List[Dict]
+    stats: RunStats
+    points: int                      # grid points streamed through
+    rows: List[Dict]                 # only populated with keep_rows=True
+
+    def pareto(self, objectives: Sequence[Tuple[str, str]]
+               = DEFAULT_OBJECTIVES) -> List[Dict]:
+        return self.front_rows
+
+    def top_k(self, metric: str, k: int = 5, *, direction: str = "min"
+              ) -> List[Dict]:
+        return self.topk_rows[:k]
+
+    # CSV/JSON mirror SweepResult's surface over the retained rows
+    fieldnames = SweepResult.fieldnames
+    to_csv = SweepResult.to_csv
+    to_json = SweepResult.to_json
+
+
+def stream_grid(point_iter, *,
+                runner: SweepRunner,
+                chunk: int = 4096,
+                objectives: Sequence[Tuple[str, str]] = DEFAULT_OBJECTIVES,
+                metric: str = "latency_ms",
+                k: int = 5,
+                direction: str = "min",
+                keep_rows: bool = False,
+                csv_path: Optional[Union[str, Path]] = None,
+                total: Optional[int] = None) -> StreamResult:
+    """Evaluate a (lazily generated) point stream in chunks, keeping
+    only the incremental Pareto front and top-k — million-point sweeps
+    never hold all rows in memory.
+
+    Feeds ``chunk`` points at a time through ``runner.run`` (batched if
+    the runner has a ``batch_size``), folds the assembled rows into a
+    :class:`~repro.explore.pareto.ParetoFront` and
+    :class:`~repro.explore.pareto.StreamingTopK` (both provably
+    equivalent to their one-shot counterparts), optionally appends every
+    row to ``csv_path``, then drops the rows unless ``keep_rows``.
+    Progress surfaces through ``explore.stream`` heartbeats carrying
+    points/s, chunk size, and current front size.
+    """
+    front = ParetoFront(objectives)
+    topk = StreamingTopK(metric, k, direction=direction)
+    stats = RunStats(workers=runner.workers)
+    kept: List[Dict] = []
+    checked: set = set()
+    n_points = 0
+    hb = obs.heartbeat("explore.stream", total=total or 0)
+    csv_writer = None
+    csv_file = None
+    point_iter = iter(point_iter)
+    try:
+        while True:
+            points = list(itertools.islice(point_iter, chunk))
+            if not points:
+                break
+            _preflight_points(points, checked, "explore.stream_grid")
+            jobs: List[ExploreJob] = []
+            for p in points:
+                jobs.append(p.job)
+                jobs.append(p.dense)
+            reports = runner.run(jobs)
+            rows = _assemble_rows(points, reports)
+            for row in rows:
+                front.add(row)
+                topk.add(row)
+            if csv_path is not None:
+                if csv_writer is None:
+                    csv_file = open(csv_path, "w", newline="")
+                    csv_writer = csv.DictWriter(
+                        csv_file, fieldnames=list(rows[0].keys()),
+                        extrasaction="ignore")
+                    csv_writer.writeheader()
+                csv_writer.writerows(rows)
+            if keep_rows:
+                kept.extend(rows)
+            n_points += len(points)
+            stats = stats.merge(runner.last_stats)
+            hb.tick(n_points, chunk=len(points), front=len(front),
+                    batches=runner.last_stats.batches)
+    finally:
+        if csv_file is not None:
+            csv_file.close()
+    stats.workers = runner.workers
+    return StreamResult(front_rows=front.front(), topk_rows=topk.best(),
+                        stats=stats, points=n_points, rows=kept)
 
 
 # ---------------------------------------------------------------------------

@@ -283,6 +283,47 @@ def test_cachekey_catches_faults_import_in_job_module(tmp_path):
     assert any("faults" in d.message for d in diags)
 
 
+def test_cachekey_catches_batch_named_job_field(tmp_path):
+    """CIM207: batching is an execution knob — results are bit-identical
+    by contract, so a batch-named ExploreJob field would fracture the
+    store namespace for no semantic reason."""
+    root = _mutated_tree(tmp_path)
+    _sub(root, "explore/job.py",
+         "kind: str                                   # 'simulate' | 'dense'",
+         "kind: str                                   # 'simulate' | 'dense'"
+         "\n    batch_size: int = 0")
+    diags = _run("cache-key", root)
+    assert "CIM207" in _codes(diags)
+    assert any("batch_size" in d.message for d in diags)
+
+
+def test_cachekey_catches_search_named_simulate_param(tmp_path):
+    root = _mutated_tree(tmp_path)
+    _sub(root, "core/costmodel.py",
+         "def simulate(",
+         "def simulate(*, search_budget=None):\n    pass\n"
+         "def _old_simulate(")
+    diags = _run("cache-key", root)
+    assert "CIM207" in _codes(diags)
+    assert any("search_budget" in d.message for d in diags)
+
+
+def test_cachekey_catches_batch_import_in_job_module(tmp_path):
+    root = _mutated_tree(tmp_path)
+    _append(root, "explore/job.py", "\nfrom . import batch  # noqa\n")
+    diags = _run("cache-key", root)
+    assert _codes(diags) == ["CIM207"]
+    assert any("batch" in d.message for d in diags)
+
+
+def test_cachekey_catches_search_import_in_job_module(tmp_path):
+    root = _mutated_tree(tmp_path)
+    _append(root, "explore/job.py",
+            "\nfrom .search import SearchPolicy  # noqa\n")
+    diags = _run("cache-key", root)
+    assert _codes(diags) == ["CIM207"]
+
+
 # ---------------------------------------------------------------------------
 # pass 3: model-plane validation (live-object goldens)
 # ---------------------------------------------------------------------------

@@ -1,0 +1,246 @@
+"""Batched-evaluation tests: the bit-identity contract.
+
+The batched path (``repro.explore.batch``) may reorganise *how* work
+executes — one costing pass per variant group, stacked tile-grid
+precompute across a whole batch — but never *what* it computes: every
+CostReport must equal the per-point ``evaluate_job`` result field for
+field, and every result must land under the per-point cache key.
+"""
+import numpy as np
+import pytest
+
+from repro.calibrate.profile import resolve_profile
+from repro.core import (TABLE_II_PATTERNS, default_mapping, hybrid,
+                        usecase_arch)
+from repro.core.mapping import (TileGridCache, precompute_tile_grids,
+                                reference_loops, reshape_and_compress)
+from repro.core.schedule import SchedulePolicy
+from repro.core.workload import Workload
+from repro.explore import (ExploreJob, FaultPlan, ResultCache, SweepRunner,
+                           content_key, evaluate_batch, evaluate_job, faults,
+                           group_jobs, job_keys, plan_batches)
+from repro.explore.sweeps import GridPoint, run_grid
+
+RATIO = 0.8
+
+
+@pytest.fixture(scope="module")
+def arch4():
+    return usecase_arch(4)
+
+
+@pytest.fixture(autouse=True)
+def _no_leaked_plan():
+    yield
+    faults.uninstall()
+
+
+def small_wl():
+    w = Workload("batchy")
+    w.fc("fc1", 96, 96)
+    w.fc("fc2", 96, 48, inputs=("fc1",))
+    return w
+
+
+def variant_jobs(arch, n_patterns=3):
+    """Jobs spanning patterns × strategies × schedules × profiles — the
+    variant axes (profile, schedule) group; the rest don't."""
+    patterns = dict(list(TABLE_II_PATTERNS(RATIO, c_in=16).items())
+                    [:n_patterns])
+    prof = resolve_profile("default")
+    jobs = []
+    for name, spec in patterns.items():
+        wl = small_wl().set_sparsity(spec)
+        for strat in ("spatial", "duplicate"):
+            m = default_mapping(arch, strat)
+            for pol in (None, "partitioned", "resident"):
+                sched = SchedulePolicy(policy=pol) if pol else None
+                for p in (None, prof):
+                    jobs.append(ExploreJob.simulate(arch, wl, m,
+                                                    profile=p,
+                                                    schedule=sched))
+    return jobs
+
+
+# ---------------------------------------------------------------------------
+# keys and grouping
+# ---------------------------------------------------------------------------
+
+def test_job_keys_match_content_key(arch4):
+    job = ExploreJob.simulate(arch4, small_wl().set_sparsity(
+        hybrid(2, 16, RATIO)), default_mapping(arch4))
+    full, base = job_keys(job)
+    assert full == content_key(job) == job.key
+    assert base != full                    # distinct "b" domain
+
+
+def test_variants_share_base_key(arch4):
+    wl = small_wl().set_sparsity(hybrid(2, 16, RATIO))
+    m = default_mapping(arch4)
+    j1 = ExploreJob.simulate(arch4, wl, m)
+    j2 = ExploreJob.simulate(arch4, wl, m,
+                             schedule=SchedulePolicy(policy="partitioned"))
+    j3 = ExploreJob.simulate(arch4, wl, m,
+                             profile=resolve_profile("default"))
+    j4 = ExploreJob.simulate(arch4, wl, default_mapping(arch4, "duplicate"))
+    keys = [job_keys(j) for j in (j1, j2, j3, j4)]
+    assert len({k for k, _ in keys}) == 4          # full keys all distinct
+    assert keys[0][1] == keys[1][1] == keys[2][1]  # variants share base
+    assert keys[3][1] != keys[0][1]                # mapping change splits
+
+
+def test_group_jobs_buckets_by_base_key(arch4):
+    jobs = variant_jobs(arch4, n_patterns=2)
+    groups = group_jobs(jobs)
+    # 2 patterns × 2 strategies = 4 groups of 3 schedules × 2 profiles
+    assert len(groups) == 4
+    assert all(len(g) == 6 for g in groups)
+    # no job lost or duplicated
+    assert sorted(j.key for g in groups for j in g) \
+        == sorted(j.key for j in jobs)
+
+
+def test_plan_batches_never_splits_groups():
+    groups = [[object()] * n for n in (3, 1, 3, 1, 5)]
+    batches = plan_batches(groups, batch_size=4)
+    flat = [g for b in batches for g in b]
+    assert flat == groups                          # order preserved, whole
+    assert [sum(len(g) for g in b) for b in batches] == [4, 4, 5]
+    # an oversized group still ships whole, in its own batch
+    big = [[object()] * 9]
+    assert plan_batches(big, 4) == [big]
+
+
+# ---------------------------------------------------------------------------
+# bit-identity
+# ---------------------------------------------------------------------------
+
+def test_batched_reports_bit_identical(arch4):
+    """The tentpole contract: evaluate_batch == evaluate_job, field for
+    field, across patterns × strategies × schedules × profiles."""
+    jobs = variant_jobs(arch4)
+    groups = group_jobs(jobs)
+    batched = evaluate_batch(groups)
+    assert set(batched) == {j.key for j in jobs}
+    for job in jobs:
+        solo = evaluate_job(job)
+        assert batched[job.key].to_dict() == solo.to_dict(), job.key
+
+
+def test_precompute_tile_grids_bit_identical(arch4):
+    """Stacked reduceat precompute produces the same TileGrids as the
+    one-at-a-time path."""
+    m = default_mapping(arch4)
+    requests = []
+    for spec in TABLE_II_PATTERNS(RATIO, c_in=16).values():
+        wl = small_wl().set_sparsity(spec)
+        for op in wl.nodes.values():
+            if op.is_mvm:
+                requests.append((op, arch4, m.reshape, None))
+    warm = TileGridCache()
+    precompute_tile_grids(requests, cache=warm)
+    for op, arch, reshape, keep in requests:
+        got = reshape_and_compress(op, arch, reshape, block_keep=keep,
+                                   cache=warm)
+        ref = reshape_and_compress(op, arch, reshape, block_keep=keep,
+                                   cache=TileGridCache())
+        np.testing.assert_array_equal(got.k_eff, ref.k_eff)
+        np.testing.assert_array_equal(got.occupancy, ref.occupancy)
+        np.testing.assert_array_equal(got.band_stats(arch.macro.sub_rows),
+                                      ref.band_stats(arch.macro.sub_rows))
+
+
+def test_precompute_noop_under_reference_loops(arch4):
+    m = default_mapping(arch4)
+    wl = small_wl().set_sparsity(hybrid(2, 16, RATIO))
+    op = next(o for o in wl.nodes.values() if o.is_mvm)
+    cache = TileGridCache()
+    with reference_loops():
+        out = precompute_tile_grids([(op, arch4, m.reshape, None)],
+                                    cache=cache)
+    assert out == {} and len(cache) == 0
+
+
+# ---------------------------------------------------------------------------
+# runner integration
+# ---------------------------------------------------------------------------
+
+def _grid_points(arch):
+    prof = resolve_profile("default")
+    points = []
+    for name, spec in TABLE_II_PATTERNS(RATIO, c_in=16).items():
+        wl = small_wl().set_sparsity(spec)
+        for pol in ("monolithic", "partitioned"):
+            sched = SchedulePolicy(policy=pol)
+            for p in (None, prof):
+                m = default_mapping(arch)
+                job = ExploreJob.simulate(arch, wl, m, profile=p,
+                                          schedule=sched)
+                dense = ExploreJob.dense(arch, small_wl(), m, profile=p,
+                                         schedule=sched)
+                points.append(GridPoint(job, dense, meta=(
+                    ("pattern", name), ("ratio", RATIO),
+                    ("schedule", pol))))
+    return points
+
+
+def test_runner_batched_rows_equal_per_point(arch4):
+    points = _grid_points(arch4)
+    ref = run_grid(points, runner=SweepRunner(workers=1))
+    for batch_size in (0, 3, 64):
+        res = run_grid(points,
+                       runner=SweepRunner(workers=1,
+                                          batch_size=batch_size))
+        assert res.rows == ref.rows, f"batch_size={batch_size}"
+        assert res.stats.batched_points > 0
+        assert res.stats.batches > 0
+        assert "batched:" in res.stats.stats_text()
+
+
+def test_runner_batched_parallel_equals_sequential(arch4):
+    points = _grid_points(arch4)
+    ref = run_grid(points, runner=SweepRunner(workers=1))
+    runner = SweepRunner(workers=2, batch_size=8)
+    try:
+        res = run_grid(points, runner=runner)
+    finally:
+        runner.close()
+    assert res.rows == ref.rows
+    assert res.stats.batched_points > 0
+
+
+def test_batched_results_share_per_point_cache_keys(arch4, tmp_path):
+    """CIM207 behavioural half: a batched run fully warms the store a
+    per-point run reads — batching never enters the key."""
+    points = _grid_points(arch4)
+    batched = run_grid(points, runner=SweepRunner(
+        workers=1, batch_size=16, cache=ResultCache(tmp_path)))
+    assert batched.stats.evaluated > 0
+    replay = run_grid(points, runner=SweepRunner(
+        workers=1, cache=ResultCache(tmp_path)))   # per-point, cold memory
+    assert replay.stats.evaluated == 0
+    assert replay.stats.disk_hits == replay.stats.unique
+    assert replay.rows == batched.rows
+
+
+def test_fault_in_batch_falls_back_to_per_point(arch4):
+    """A fault anywhere in a batch fails the whole dispatch UNCHARGED:
+    the per-point retry machinery then heals it, so surviving rows are
+    bit-identical to a fault-free run."""
+    points = _grid_points(arch4)
+    ref = run_grid(points, runner=SweepRunner(workers=1))
+    keys = {p.job.key for p in points} | {p.dense.key for p in points}
+    # a seed whose plan injects at least one first-attempt exception
+    for seed in range(200):
+        plan = FaultPlan(seed=seed, exc=0.2, times=1)
+        if any(plan.selected("exc", k) for k in keys):
+            break
+    else:
+        raise AssertionError("no seed selects a key")
+    faults.install(plan, export_env=False)
+    try:
+        res = run_grid(points, runner=SweepRunner(workers=1,
+                                                  batch_size=16))
+    finally:
+        faults.uninstall()
+    assert res.rows == ref.rows

@@ -1,0 +1,147 @@
+"""Pareto/top-k tests: edge cases and the streaming-equivalence pin.
+
+``ParetoFront`` / ``StreamingTopK`` exist so million-point sweeps never
+hold all rows; their contract is exact equality with the one-shot
+``pareto_front`` / ``top_k`` over the same stream.
+"""
+import math
+import random
+
+import pytest
+
+from repro.explore import (ParetoFront, StreamingTopK, pareto_front, top_k)
+
+OBJS = (("latency_ms", "min"), ("energy_uj", "min"))
+
+
+def _row(lat, en, tag=None):
+    r = {"latency_ms": lat, "energy_uj": en}
+    if tag is not None:
+        r["tag"] = tag
+    return r
+
+
+# ---------------------------------------------------------------------------
+# one-shot edge cases
+# ---------------------------------------------------------------------------
+
+def test_front_empty_input():
+    assert pareto_front([], OBJS) == []
+    assert top_k([], "latency_ms") == []
+
+
+def test_front_single_point():
+    rows = [_row(1.0, 2.0)]
+    assert pareto_front(rows, OBJS) == rows
+    assert top_k(rows, "latency_ms") == rows
+
+
+def test_front_ties_on_all_objectives_all_survive():
+    rows = [_row(1.0, 2.0, t) for t in ("a", "b", "c")]
+    assert pareto_front(rows, OBJS) == rows        # nobody dominates
+
+
+def test_front_nan_rows_excluded():
+    good = _row(1.0, 1.0, "good")
+    rows = [_row(float("nan"), 0.5, "n1"), good,
+            _row(0.1, float("nan"), "n2")]
+    assert pareto_front(rows, OBJS) == [good]
+    # top_k on latency: the NaN-latency row drops, the NaN-energy row
+    # (finite latency 0.1) stays and sorts first
+    assert top_k(rows, "latency_ms", 5) == [rows[2], good]
+
+
+def test_front_inf_participates_normally():
+    rows = [_row(float("inf"), 0.5, "i"), _row(1.0, 1.0, "f"),
+            _row(float("inf"), 2.0, "dom")]
+    # inf/0.5 survives (best energy); inf/2.0 is dominated by both
+    assert pareto_front(rows, OBJS) == rows[:2]
+
+
+def test_front_none_and_missing_excluded():
+    good = _row(1.0, 1.0)
+    rows = [{"latency_ms": None, "energy_uj": 0.1},
+            {"energy_uj": 0.1}, good]
+    assert pareto_front(rows, OBJS) == [good]
+
+
+def test_front_max_direction():
+    # with energy MAXimised, (1.0, 5.0) dominates (2.0, 3.0) outright
+    rows = [_row(1.0, 5.0), _row(2.0, 3.0), _row(1.5, 1.0)]
+    objs = (("latency_ms", "min"), ("energy_uj", "max"))
+    assert pareto_front(rows, objs) == [rows[0]]
+
+
+# ---------------------------------------------------------------------------
+# streaming equivalence
+# ---------------------------------------------------------------------------
+
+def _random_rows(n, rng):
+    rows = []
+    for i in range(n):
+        roll = rng.random()
+        if roll < 0.05:
+            rows.append(_row(float("nan"), rng.random(), i))
+        elif roll < 0.08:
+            rows.append(_row(rng.random(), None, i))
+        elif roll < 0.11:
+            rows.append({"energy_uj": rng.random(), "tag": i})
+        elif roll < 0.16:
+            rows.append(_row(float("inf"), rng.random(), i))
+        elif roll < 0.30:
+            rows.append(_row(0.5, 0.5, i))         # heavy duplicates
+        else:
+            rows.append(_row(round(rng.random(), 2),
+                             round(rng.random(), 2), i))
+    return rows
+
+
+def test_streaming_front_equals_one_shot():
+    rng = random.Random(7)
+    rows = _random_rows(800, rng)
+    inc = ParetoFront(OBJS)
+    inc.extend(rows)
+    assert inc.front() == pareto_front(rows, OBJS)
+    assert len(inc) == len(pareto_front(rows, OBJS))
+    assert inc.seen + inc.skipped == len(rows)
+
+
+def test_streaming_front_chunked_feeding():
+    rng = random.Random(11)
+    rows = _random_rows(500, rng)
+    inc = ParetoFront(OBJS)
+    for i in range(0, len(rows), 37):
+        inc.extend(rows[i:i + 37])
+    assert inc.front() == pareto_front(rows, OBJS)
+
+
+def test_streaming_front_add_return_value():
+    inc = ParetoFront(OBJS)
+    assert inc.add(_row(1.0, 1.0)) is True
+    assert inc.add(_row(2.0, 2.0)) is False        # dominated
+    assert inc.add(_row(0.5, 2.0)) is True         # trade-off
+    assert inc.add(_row(float("nan"), 0.0)) is False
+
+
+@pytest.mark.parametrize("direction", ["min", "max"])
+@pytest.mark.parametrize("k", [0, 1, 5, 17])
+def test_streaming_topk_equals_one_shot(direction, k):
+    rng = random.Random(13)
+    rows = _random_rows(600, rng)
+    inc = StreamingTopK("latency_ms", k, direction=direction)
+    inc.extend(rows)
+    assert inc.best() == top_k(rows, "latency_ms", k, direction=direction)
+
+
+def test_streaming_topk_tie_order_matches_stable_sort():
+    rows = [_row(1.0, 0.0, t) for t in range(6)]
+    for direction in ("min", "max"):
+        inc = StreamingTopK("latency_ms", 3, direction=direction)
+        inc.extend(rows)
+        assert inc.best() == top_k(rows, "latency_ms", 3,
+                                   direction=direction) == rows[:3]
+
+
+def test_streaming_topk_rejects_bad_direction():
+    with pytest.raises(ValueError):
+        StreamingTopK("latency_ms", 3, direction="sideways")

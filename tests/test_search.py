@@ -1,0 +1,208 @@
+"""Guided-search tests: determinism, budgets, resumability, streaming.
+
+Search policies choose *which* points evaluate, never *what* a point
+computes — so every policy must be deterministic (same policy → same
+trajectory), budget-bounded, and fully resumable through a PR 9 run
+directory (second run → zero evaluations).
+"""
+import numpy as np
+import pytest
+
+from repro.core import FlexBlockSpec, FullBlock, default_mapping, usecase_arch
+from repro.core.schedule import SchedulePolicy
+from repro.core.workload import Workload
+from repro.explore import (ExploreJob, PointSpace, ResultCache, SearchPolicy,
+                           SweepRunner, estimate_job, run_search)
+from repro.explore.sweeps import GridPoint, run_grid, stream_grid
+
+RATIOS = (0.3, 0.45, 0.6, 0.75, 0.9)
+STRATEGIES = ("spatial", "duplicate")
+POLICIES = ("monolithic", "partitioned")
+SHAPE = (len(RATIOS), len(STRATEGIES), len(POLICIES))
+
+
+@pytest.fixture(scope="module")
+def arch4():
+    return usecase_arch(4)
+
+
+def _wl():
+    w = Workload("searchy")
+    w.fc("fc1", 64, 64)
+    w.fc("fc2", 64, 32, inputs=("fc1",))
+    return w
+
+
+@pytest.fixture(scope="module")
+def space(arch4):
+    mappings = {s: default_mapping(arch4, s) for s in STRATEGIES}
+    scheds = {p: SchedulePolicy(policy=p) for p in POLICIES}
+
+    def factory(i):
+        ri, si, pi = np.unravel_index(i, SHAPE)
+        ratio = RATIOS[ri]
+        strat, pol = STRATEGIES[si], POLICIES[pi]
+        spec = FlexBlockSpec((FullBlock(16, 16, ratio),), name="b")
+        job = ExploreJob.simulate(arch4, _wl().set_sparsity(spec),
+                                  mappings[strat], schedule=scheds[pol])
+        dense = ExploreJob.dense(arch4, _wl(), mappings[strat],
+                                 schedule=scheds[pol])
+        return GridPoint(job, dense, meta=(("pattern", "b"),
+                                           ("ratio", ratio),
+                                           ("schedule", pol)))
+
+    return PointSpace(int(np.prod(SHAPE)), factory, SHAPE)
+
+
+@pytest.fixture(scope="module")
+def exhaustive_rows(space):
+    points = [space.factory(i) for i in range(space.size)]
+    return run_grid(points, runner=SweepRunner(workers=1)).rows
+
+
+# ---------------------------------------------------------------------------
+# PointSpace / SearchPolicy surface
+# ---------------------------------------------------------------------------
+
+def test_point_space_coords_roundtrip(space):
+    for i in (0, 1, 7, space.size - 1):
+        assert space.index(space.coords(i)) == i
+    assert space.coords(0) == (0, 0, 0)
+
+
+def test_point_space_shape_mismatch_rejected():
+    with pytest.raises(ValueError):
+        PointSpace(10, lambda i: None, (3, 3))
+
+
+def test_search_policy_validation():
+    with pytest.raises(ValueError):
+        SearchPolicy(kind="annealing")
+    with pytest.raises(ValueError):
+        SearchPolicy(budget=0)
+    with pytest.raises(ValueError):
+        SearchPolicy(eta=1)
+    with pytest.raises(ValueError):
+        SearchPolicy(direction="up")
+
+
+def test_estimate_job_deterministic_and_finite(space):
+    jobs = [space.factory(i).job for i in range(4)]
+    ests = [estimate_job(j) for j in jobs]
+    assert all(np.isfinite(e) and e > 0 for e in ests)
+    assert ests == [estimate_job(j) for j in jobs]
+
+
+def test_estimate_jobs_bit_identical_to_per_job(arch4, space):
+    """Batch estimation shares one costing pass per variant group but
+    must reproduce estimate_job's floats exactly — including under a
+    calibration profile, whose efficiency division is replayed per op."""
+    from repro.calibrate.profile import resolve_profile
+    from repro.explore import estimate_jobs
+
+    jobs = [space.factory(i).job for i in range(space.size)]
+    prof = resolve_profile("default")
+    jobs += [ExploreJob.simulate(j.arch, j.workload, j.mapping,
+                                 profile=prof, schedule=j.schedule)
+             for j in jobs[:6]]
+    assert estimate_jobs(jobs) == [estimate_job(j) for j in jobs]
+
+
+# ---------------------------------------------------------------------------
+# stream_grid
+# ---------------------------------------------------------------------------
+
+def test_stream_grid_matches_run_grid(space, exhaustive_rows, tmp_path):
+    csv_path = tmp_path / "rows.csv"
+    sr = stream_grid((space.factory(i) for i in range(space.size)),
+                     runner=SweepRunner(workers=1, batch_size=8),
+                     chunk=6, keep_rows=True, csv_path=csv_path,
+                     total=space.size)
+    assert sr.rows == exhaustive_rows
+    ref = run_grid([space.factory(i) for i in range(space.size)],
+                   runner=SweepRunner(workers=1))
+    assert sr.front_rows == ref.pareto()
+    assert sr.topk_rows == ref.top_k("latency_ms", 5)
+    assert sr.points == space.size
+    import csv
+    with open(csv_path) as f:
+        assert len(list(csv.DictReader(f))) == space.size
+
+
+# ---------------------------------------------------------------------------
+# policies
+# ---------------------------------------------------------------------------
+
+def test_exhaustive_covers_space(space, exhaustive_rows):
+    res = run_search(space, SearchPolicy(kind="exhaustive"),
+                     runner=SweepRunner(workers=1, batch_size=8),
+                     keep_rows=True)
+    assert res.rows == exhaustive_rows
+    assert res.points == space.size and res.estimated == 0
+
+
+def test_halving_promotes_best_estimates_in_grid_order(space):
+    budget = 5
+    ests = [estimate_job(space.factory(i).job) for i in range(space.size)]
+    survivors = sorted(sorted(range(space.size),
+                              key=lambda i: (ests[i], i))[:budget])
+    expect = run_grid([space.factory(i) for i in survivors],
+                      runner=SweepRunner(workers=1)).rows
+    res = run_search(space, SearchPolicy(kind="halving", budget=budget),
+                     runner=SweepRunner(workers=1, batch_size=8),
+                     keep_rows=True)
+    assert res.rows == expect
+    assert res.points == budget and res.estimated == space.size
+
+
+def test_halving_default_budget_is_size_over_eta(space):
+    res = run_search(space, SearchPolicy(kind="halving", eta=4),
+                     runner=SweepRunner(workers=1), keep_rows=True)
+    assert res.points == space.size // 4
+
+
+def test_evolve_deterministic_and_budget_bounded(space):
+    pol = SearchPolicy(kind="evolve", budget=10, seed=5, population=4)
+    runs = [run_search(space, pol, runner=SweepRunner(workers=1,
+                                                      batch_size=8),
+                       keep_rows=True) for _ in range(2)]
+    assert runs[0].rows == runs[1].rows            # same trajectory
+    assert runs[0].points == runs[1].points <= 10
+    assert all("space_index" in r for r in runs[0].rows)
+    seen = [r["space_index"] for r in runs[0].rows]
+    assert len(set(seen)) == len(seen)             # never re-evaluates
+
+
+def test_evolve_different_seeds_diverge(space):
+    mk = lambda s: run_search(  # noqa: E731
+        space, SearchPolicy(kind="evolve", budget=12, seed=s, population=4),
+        runner=SweepRunner(workers=1), keep_rows=True)
+    a, b = mk(1), mk(2)
+    assert [r["space_index"] for r in a.rows] \
+        != [r["space_index"] for r in b.rows]
+
+
+def test_search_resumes_with_zero_evaluations(space, tmp_path):
+    pol = SearchPolicy(kind="halving", budget=5)
+    first = run_search(space, pol, runner=SweepRunner(
+        workers=1, batch_size=8, cache=ResultCache(tmp_path)),
+        keep_rows=True)
+    assert first.stats.evaluated > 0
+    second = run_search(space, pol, runner=SweepRunner(
+        workers=1, batch_size=8, cache=ResultCache(tmp_path)),
+        keep_rows=True)
+    assert second.rows == first.rows
+    assert second.stats.evaluated == 0             # all served by store
+
+
+def test_search_rows_shared_across_policies(space, tmp_path):
+    """Search is an execution knob (CIM207): a point evaluated under
+    halving serves the same store entry to an exhaustive replay."""
+    run_search(space, SearchPolicy(kind="halving", budget=5),
+               runner=SweepRunner(workers=1,
+                                  cache=ResultCache(tmp_path)))
+    replay = run_search(space, SearchPolicy(kind="exhaustive"),
+                        runner=SweepRunner(workers=1,
+                                           cache=ResultCache(tmp_path)),
+                        keep_rows=True)
+    assert replay.stats.disk_hits > 0
